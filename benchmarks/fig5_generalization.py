@@ -1,0 +1,40 @@
+"""Figure 5 reproduction: zero-shot transfer of the GNN policy — train on
+one workload, evaluate (no fine-tuning) on the others."""
+from __future__ import annotations
+
+import json
+import os
+
+from repro.core.egrl import EGRL, EGRLConfig, evaluate_gnn_on
+from repro.graphs.zoo import PAPER_WORKLOADS
+
+
+def run(steps: int = 1000, train_on=("bert", "resnet50"),
+        outdir: str = "experiments/fig5", seed: int = 0, log=print):
+    os.makedirs(outdir, exist_ok=True)
+    rows = []
+    for src in train_on:
+        algo = EGRL(PAPER_WORKLOADS[src](),
+                    EGRLConfig(total_steps=steps, seed=seed), mode="egrl")
+        algo.train()
+        vec = algo.best_gnn_vec()
+        src_speedup = algo.best_reward / algo.cfg.reward_scale
+        for dst in PAPER_WORKLOADS:
+            if dst == src:
+                sp = src_speedup
+            else:
+                sp = evaluate_gnn_on(PAPER_WORKLOADS[dst](), vec, seed=seed)
+            rows.append({"train": src, "eval": dst, "speedup": sp})
+            if log:
+                log(f"fig5,{src}->{dst},{sp:.3f}")
+    with open(os.path.join(outdir, f"fig5_{steps}.json"), "w") as f:
+        json.dump(rows, f, indent=1)
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=2000)
+    a = ap.parse_args()
+    run(a.steps)

@@ -1,0 +1,98 @@
+"""Roofline derivation: read launch/dryrun.py JSON artifacts and emit the
+three-term roofline per (arch x shape x mesh):
+
+  compute    = HLO_FLOPs_per_device / peak_FLOP/s          (197e12 bf16)
+  memory     = HLO_bytes_per_device / HBM_bw               (819e9)
+  collective = collective_bytes_per_device / link_bw       (50e9 ... 2 GB/s DCN
+               is NOT modeled separately; pod-axis collectives use ICI bw,
+               noted in EXPERIMENTS.md)
+
+plus MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D (MoE) per device and the
+useful-compute ratio MODEL_FLOPS / HLO_FLOPs.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+PEAK = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+# active params (approx, for MODEL_FLOPS = 6*N_active*D)
+ACTIVE_PARAMS = {
+    "granite-3-8b": 8.2e9, "llama3-405b": 405e9, "qwen3-0.6b": 0.75e9,
+    "qwen2.5-14b": 14.8e9, "llama4-maverick-400b-a17b": 17e9,
+    "qwen3-moe-30b-a3b": 3.3e9, "chameleon-34b": 34e9,
+    "mamba2-780m": 0.78e9, "zamba2-1.2b": 1.2e9,
+    "seamless-m4t-medium": 0.48e9,
+}
+
+TOKENS = {"train_4k": 4096 * 256, "prefill_32k": 32768 * 32,
+          "decode_32k": 128, "long_500k": 1}
+
+
+def derive(rec: Dict) -> Dict:
+    n_chips = rec["n_chips"]
+    ca = rec["cost_analysis"]
+    # trip-count-aware terms (cost_analysis counts while bodies once)
+    flops = ca.get("flops_tripaware") or ca["flops_per_device"]
+    bytes_ = ca.get("hbm_bytes_tripaware") or ca["bytes_accessed_per_device"]
+    coll = rec["collectives"]["total_per_device_bytes"]
+    t_comp = flops / PEAK
+    t_mem = bytes_ / HBM_BW
+    t_coll = coll / LINK_BW
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    dom = max(terms, key=terms.get)
+    # model flops for this step, per device
+    n_act = ACTIVE_PARAMS.get(rec["arch"], 0.0)
+    tokens = TOKENS.get(rec["shape"], 0)
+    mult = 6.0 if rec["shape"] == "train_4k" else 2.0  # fwd+bwd vs fwd
+    model_flops = mult * n_act * tokens / n_chips
+    useful = model_flops / max(flops, 1.0)
+    bound = max(terms.values())
+    # roofline fraction: time the hardware MUST spend on useful math vs the
+    # time the compiled program spends on its dominant resource
+    frac = (model_flops / PEAK) / max(bound, 1e-12)
+    return {**{f"t_{k}": v for k, v in terms.items()},
+            "dominant": dom, "model_flops_per_device": model_flops,
+            "useful_ratio": useful, "roofline_fraction": frac,
+            "step_time_bound_s": bound}
+
+
+def load(outdir: str = "experiments/dryrun") -> List[Dict]:
+    rows = []
+    for p in sorted(glob.glob(os.path.join(outdir, "*.json"))):
+        with open(p) as f:
+            rec = json.load(f)
+        rec.update(derive(rec))
+        rows.append(rec)
+    return rows
+
+
+def table(rows: List[Dict], mesh: str = "16x16") -> str:
+    hdr = ("| arch | shape | compute s | memory s | collective s | dominant "
+           "| useful | roofline frac | HBM GiB |\n|---|---|---|---|---|---|---|---|---|")
+    lines = [hdr]
+    for r in rows:
+        if r["mesh"] != mesh:
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute']:.3e} "
+            f"| {r['t_memory']:.3e} | {r['t_collective']:.3e} "
+            f"| {r['dominant']} | {r['useful_ratio']:.2f} "
+            f"| {r['roofline_fraction']:.3f} "
+            f"| {r['per_device_bytes'] / 2 ** 30:.2f} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--mesh", default="16x16")
+    a = ap.parse_args()
+    rows = load(a.dir)
+    print(table(rows, a.mesh))

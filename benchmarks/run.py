@@ -1,0 +1,92 @@
+"""Benchmark harness entry: one function per paper table/figure.
+Prints ``name,value,derived`` CSV. BENCH_STEPS / BENCH_SEEDS env vars
+control the budget (defaults keep a full run ~20-30 min on this CPU
+container; the full-budget numbers in EXPERIMENTS.md come from the
+background runs under experiments/)."""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+STEPS = int(os.environ.get("BENCH_STEPS", "800"))
+SEEDS = int(os.environ.get("BENCH_SEEDS", "1"))
+
+
+def bench_simulator() -> None:
+    """Microbenchmark: vmapped population evaluation (the inner loop)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.graphs.zoo import resnet50, bert
+    from repro.memsim.simulator import build_sim_graph, evaluate_population
+    from repro.memsim.compiler import compiler_reference
+
+    for g in (resnet50(), bert()):
+        sg = build_sim_graph(g)
+        _, ref = compiler_reference(g)
+        maps = jax.random.randint(jax.random.PRNGKey(0), (64, g.n, 2), 0, 3)
+        r = evaluate_population(sg, maps, jnp.float32(ref))
+        jax.block_until_ready(r["reward"])
+        t0 = time.perf_counter()
+        for _ in range(5):
+            r = evaluate_population(sg, maps, jnp.float32(ref))
+            jax.block_until_ready(r["reward"])
+        us = (time.perf_counter() - t0) / 5 / 64 * 1e6
+        print(f"simulator_rollout_{g.name},{us:.1f},us_per_rollout_pop64")
+
+
+def bench_fig4() -> None:
+    from fig4_speedup import run as fig4
+    fig4(steps=STEPS, seeds=tuple(range(SEEDS)), log=lambda m: print(m))
+
+
+def bench_fig5() -> None:
+    from fig5_generalization import run as fig5
+    fig5(steps=STEPS, log=lambda m: print(m))
+
+
+def bench_fig7() -> None:
+    from map_shift import run as fig7
+    fig7(steps=STEPS, log=lambda m: print(m))
+
+
+def bench_arch_placement() -> None:
+    """Beyond-paper: EGRL placement on assigned-architecture graphs."""
+    from repro.launch.optimize_placement import optimize
+    for arch, shape in (("granite-3-8b", "decode_32k"),
+                        ("qwen3-moe-30b-a3b", "decode_32k"),
+                        ("mamba2-780m", "long_500k")):
+        plan, _ = optimize(arch, shape, steps=min(STEPS, 600), log=None)
+        print(f"placement_{arch}_{shape},{plan['speedup_vs_compiler']:.3f},"
+              f"speedup_vs_compiler")
+
+
+def bench_roofline() -> None:
+    from roofline import load
+    rows = load("experiments/dryrun")
+    if not rows:
+        print("roofline,skipped,run launch/dryrun.py first")
+        return
+    for r in rows:
+        if r["mesh"] == "16x16":
+            print(f"roofline_{r['arch']}_{r['shape']},"
+                  f"{r['roofline_fraction']:.3f},dominant={r['dominant']}")
+
+
+def main() -> None:
+    sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+    t0 = time.time()
+    print("name,value,derived")
+    bench_simulator()
+    bench_fig4()
+    bench_fig5()
+    bench_fig7()
+    bench_arch_placement()
+    bench_roofline()
+    print(f"total_wall_s,{time.time() - t0:.0f},")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,15 @@
+"""EGRL memory placement for an assigned architecture: extract the
+per-chip workload graph for granite-3-8b decode, search, emit the plan.
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.optimize_placement import optimize
+
+plan, algo = optimize("granite-3-8b", "decode_32k", steps=400, log=print)
+print(f"\nspeedup vs compiler: {plan['speedup_vs_compiler']:.3f}x "
+      f"({plan['compiler_latency_ms']:.3f} -> {plan['latency_ms']:.3f} ms/token)")
+print(f"derived remat suggestion for training: "
+      f"{plan['derived']['suggested_remat']}")

@@ -1,0 +1,36 @@
+"""Train a ~100M-param qwen3-family model for a few hundred steps on CPU
+with the full production loop (checkpointing, preemption handling,
+deterministic data). `--steps 300` takes a few minutes.
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs.registry import get_config
+from repro.launch.train import TrainLoop
+from repro.utils.params import param_count
+import jax
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--ckpt", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    # ~100M params: qwen3 family, 12 layers, d=512
+    cfg = get_config("qwen3-0.6b").replace(
+        n_layers=12, d_model=512, n_heads=8, n_kv_heads=4, head_dim=64,
+        d_ff=1536, dtype="float32", param_dtype="float32", remat="none",
+        attn_chunk=128, logit_chunk=128)
+    loop = TrainLoop(cfg, global_batch=8, seq=256, ckpt_dir=args.ckpt)
+    n = param_count(loop.model.init(jax.random.PRNGKey(0)))
+    print(f"params: {n / 1e6:.1f}M; resuming from "
+          f"{loop.restore_or_init()[2]} steps")
+    loop.run(args.steps, save_every=100)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Boltzmann chromosome (paper §3.2 + Appendix E): a stateless policy that
+directly parameterizes the mapping distribution — per-node prior logits P
+and a per-(node, sub-action) temperature T. Sampling softmax(P / T) gives
+an action; T is learned by evolution, balancing exploration/exploitation
+*per node*. Priors can be (re)seeded from a GNN policy's posterior —
+the mixed-population information pathway of Figure 2.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Boltzmann(NamedTuple):
+    prior: jnp.ndarray    # (N, 2, 3) logits
+    log_t: jnp.ndarray    # (N, 2) log temperature
+
+
+def init_boltzmann(key, n_nodes: int, init_action: int = 0) -> Boltzmann:
+    """Paper's initial mapping action is 'DRAM' (tier 0 = HBM here)."""
+    prior = jnp.zeros((n_nodes, 2, 3)).at[:, :, init_action].set(1.0)
+    prior = prior + 0.1 * jax.random.normal(key, prior.shape)
+    log_t = jnp.zeros((n_nodes, 2))  # T = 1
+    return Boltzmann(prior, log_t)
+
+
+def seed_from_logits(logits, key, t_init: float = 0.5) -> Boltzmann:
+    """Seed the prior from a GNN policy's posterior (Alg 2 lines 16-18)."""
+    return Boltzmann(jnp.asarray(logits),
+                     jnp.full(logits.shape[:2], jnp.log(t_init))
+                     + 0.1 * jax.random.normal(key, logits.shape[:2]))
+
+
+def boltzmann_logits(b: Boltzmann) -> jnp.ndarray:
+    t = jnp.exp(b.log_t)[..., None]
+    return b.prior / jnp.maximum(t, 1e-3)
+
+
+def sample(key, b: Boltzmann) -> jnp.ndarray:
+    return jax.random.categorical(key, boltzmann_logits(b), axis=-1).astype(jnp.int32)
+
+
+def greedy(b: Boltzmann) -> jnp.ndarray:
+    return jnp.argmax(b.prior, axis=-1).astype(jnp.int32)

@@ -1,0 +1,78 @@
+"""Evolutionary operators over the mixed population (Algorithm 2):
+tournament selection with replacement, single-point crossover within an
+encoding type, GNN->Boltzmann prior seeding across types, Gaussian
+mutation with elite shielding."""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Union
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.boltzmann import Boltzmann
+
+
+@dataclasses.dataclass
+class Individual:
+    kind: str                       # "gnn" | "boltz"
+    genome: Union[np.ndarray, Boltzmann]
+    fitness: float = -np.inf
+
+    def copy(self) -> "Individual":
+        if self.kind == "gnn":
+            return Individual("gnn", self.genome.copy(), self.fitness)
+        return Individual("boltz", Boltzmann(np.array(self.genome.prior),
+                                             np.array(self.genome.log_t)),
+                          self.fitness)
+
+
+def tournament(pop: List[Individual], rng, k: int = 3) -> Individual:
+    picks = rng.integers(0, len(pop), size=k)
+    best = max(picks, key=lambda i: pop[i].fitness)
+    return pop[best]
+
+
+def crossover_flat(a: np.ndarray, b: np.ndarray, rng) -> np.ndarray:
+    pt = rng.integers(1, len(a))
+    return np.concatenate([a[:pt], b[pt:]])
+
+
+def crossover(pa: Individual, pb: Individual, rng,
+              seed_fn=None) -> Individual:
+    """Same-type: single-point crossover. Cross-type (Alg 2 l.16-18): child
+    is a Boltzmann whose prior is seeded from the GNN parent's posterior
+    (seed_fn maps gnn genome -> Boltzmann)."""
+    if pa.kind == pb.kind == "gnn":
+        return Individual("gnn", crossover_flat(pa.genome, pb.genome, rng))
+    if pa.kind == pb.kind == "boltz":
+        fa = np.concatenate([np.asarray(pa.genome.prior).ravel(),
+                             np.asarray(pa.genome.log_t).ravel()])
+        fb = np.concatenate([np.asarray(pb.genome.prior).ravel(),
+                             np.asarray(pb.genome.log_t).ravel()])
+        f = crossover_flat(fa, fb, rng)
+        n = pa.genome.prior.size
+        return Individual("boltz", Boltzmann(
+            f[:n].reshape(pa.genome.prior.shape),
+            f[n:].reshape(pa.genome.log_t.shape)))
+    gnn_parent = pa if pa.kind == "gnn" else pb
+    assert seed_fn is not None
+    return Individual("boltz", seed_fn(gnn_parent.genome))
+
+
+def mutate(ind: Individual, rng, *, frac: float = 0.1, std: float = 0.1,
+           super_prob: float = 0.05) -> Individual:
+    if ind.kind == "gnn":
+        g = ind.genome.copy()
+        n = len(g)
+        sd = std * 10 if rng.random() < super_prob else std
+        idx = rng.random(n) < frac
+        g[idx] += rng.normal(0, sd, idx.sum()) * (np.abs(g[idx]) + 0.05)
+        return Individual("gnn", g)
+    p = np.array(ind.genome.prior)
+    t = np.array(ind.genome.log_t)
+    p += rng.normal(0, 0.3, p.shape) * (rng.random(p.shape) < frac * 3)
+    t += rng.normal(0, 0.2, t.shape) * (rng.random(t.shape) < frac * 3)
+    return Individual("boltz", Boltzmann(p, np.clip(t, -3.0, 2.0)))

@@ -1,0 +1,138 @@
+"""Graph U-Net policy (Gao & Ji 2019) in pure JAX, per the paper's §3.2:
+bidirectional graph convolutions + graph attention, hidden 128, depth 4,
+4 attention heads; per-node output = two 3-way categorical sub-actions
+(weight tier, activation tier).
+
+The adjacency is dense (graphs are <=1k nodes), symmetrized + self-loops.
+gPool keeps the top-k nodes by a learned score (static k per level), and
+gUnpool scatters back with skip connections — the U-shape of the paper's
+policy. All functions are shape-static per workload, so population forward
+passes vmap over stacked parameter pytrees (one device call per
+generation, see core/egrl.py).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils.params import ParamDef, init_params
+
+HIDDEN = 128
+DEPTH = 4
+HEADS = 4
+N_SUB = 2    # weight / activation sub-actions
+N_TIER = 3
+
+
+def _gat_defs(d_in, d_out, heads=HEADS):
+    return {
+        "w": ParamDef((d_in, d_out), (None, None), "scaled"),
+        "a_src": ParamDef((heads, d_out // heads), (None, None), "scaled"),
+        "a_dst": ParamDef((heads, d_out // heads), (None, None), "scaled"),
+        "b": ParamDef((d_out,), (None,), "zeros"),
+    }
+
+
+def gnn_defs(n_features: int, hidden: int = HIDDEN):
+    d = {
+        "inp": ParamDef((n_features, hidden), (None, None), "scaled"),
+        "pool1": ParamDef((hidden,), (None,), "scaled"),
+        "pool2": ParamDef((hidden,), (None,), "scaled"),
+        "out1": ParamDef((hidden, hidden), (None, None), "scaled"),
+        "out_b1": ParamDef((hidden,), (None,), "zeros"),
+        "out2": ParamDef((hidden, N_SUB * N_TIER), (None, None), "scaled"),
+    }
+    for i in range(DEPTH):
+        d[f"gat{i}"] = _gat_defs(hidden, hidden)
+    return d
+
+
+def init_gnn(key, n_features: int):
+    return init_params(gnn_defs(n_features), key)
+
+
+def _gat(p, h, adj_mask):
+    """Multi-head graph attention. h (N,D), adj_mask (N,N) bool."""
+    N, D = h.shape
+    hd = D // HEADS
+    z = h @ p["w"]                                   # (N, D)
+    zh = z.reshape(N, HEADS, hd)
+    e_src = jnp.einsum("nhd,hd->nh", zh, p["a_src"])  # (N, H)
+    e_dst = jnp.einsum("nhd,hd->nh", zh, p["a_dst"])
+    e = jax.nn.leaky_relu(e_src[:, None, :] + e_dst[None, :, :], 0.2)  # (N,N,H)
+    e = jnp.where(adj_mask[:, :, None], e, -1e30)
+    alpha = jax.nn.softmax(e, axis=1)                 # attend over neighbors j
+    out = jnp.einsum("njh,jhd->nhd", alpha, zh).reshape(N, D)
+    return jax.nn.elu(out + p["b"]) + h               # residual
+
+
+def _pool(score_w, h, adj, k):
+    """gPool: keep top-k nodes by learned score. Returns (h_k, adj_k, idx)."""
+    score = jnp.tanh(h @ score_w / (jnp.linalg.norm(score_w) + 1e-6))  # (N,)
+    val, idx = jax.lax.top_k(score, k)
+    h_k = h[idx] * val[:, None]                       # gate by score
+    adj_k = adj[idx][:, idx]
+    return h_k, adj_k, idx
+
+
+def _unpool(h_small, idx, n, h_skip):
+    out = jnp.zeros((n, h_small.shape[1]), h_small.dtype)
+    out = out.at[idx].set(h_small)
+    return out + h_skip
+
+
+def gnn_forward(p, feats, adj):
+    """feats (N,F), adj (N,N) row-normalized with self loops -> (N,2,3)."""
+    N = feats.shape[0]
+    mask = adj > 0
+    k1, k2 = max(2, N // 2), max(2, N // 4)
+    h = jnp.tanh(feats @ p["inp"])
+    h = _gat(p["gat0"], h, mask)                      # level 0
+    h1, a1, i1 = _pool(p["pool1"], h, adj, k1)        # down 1
+    h1 = _gat(p["gat1"], h1, a1 > 0)
+    h2, a2, i2 = _pool(p["pool2"], h1, a1, k2)        # down 2 (bottleneck)
+    h2 = _gat(p["gat2"], h2, a2 > 0)
+    h1u = _unpool(h2, i2, k1, h1)                     # up 1 (+skip)
+    h1u = _gat(p["gat3"], h1u, a1 > 0)
+    hu = _unpool(h1u, i1, N, h)                       # up 2 (+skip)
+    z = jax.nn.elu(hu @ p["out1"] + p["out_b1"])
+    logits = (z @ p["out2"]).reshape(N, N_SUB, N_TIER)
+    return logits
+
+
+def greedy_actions(logits):
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)  # (N, 2)
+
+
+def sample_actions(key, logits):
+    return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)
+
+
+def log_prob(logits, actions):
+    lp = jax.nn.log_softmax(logits, axis=-1)
+    return jnp.take_along_axis(lp, actions[..., None], axis=-1)[..., 0].sum()
+
+
+def entropy(logits):
+    """Mean per-node entropy (Appendix D averages over nodes)."""
+    lp = jax.nn.log_softmax(logits, axis=-1)
+    return -(jnp.exp(lp) * lp).sum(-1).mean()
+
+
+# ------------------------------------------------------- flat param helpers
+def flatten_params(p) -> jnp.ndarray:
+    leaves = jax.tree.leaves(p)
+    return jnp.concatenate([x.reshape(-1) for x in leaves])
+
+
+def unflatten_params(template, vec):
+    leaves, treedef = jax.tree.flatten(template)
+    out, off = [], 0
+    for x in leaves:
+        n = math.prod(x.shape)
+        out.append(vec[off:off + n].reshape(x.shape).astype(x.dtype))
+        off += n
+    return jax.tree.unflatten(treedef, out)

@@ -1,0 +1,160 @@
+"""SAC policy-gradient learner, modified for the huge multi-discrete action
+space per Appendix D:
+
+- discrete entropy computed exactly and averaged over nodes;
+- double-Q critic evaluated on NOISY one-hot behavioral actions
+  (clipped Gaussian, smooths the value estimate);
+- actor trained through the critic with the softmax probabilities as a
+  differentiable soft action (the sampled-policy-gradient of App. D);
+- single-step episodes (Table 2: '# steps per episode' = 1) make the
+  bootstrap term vanish: the Bellman target is the (scaled) reward, so no
+  target networks are required — noted deviation from the generic
+  pseudocode, exact for this MDP.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import gnn
+from repro.core.replay import ReplayBuffer
+from repro.utils.params import ParamDef, init_params
+
+
+@dataclasses.dataclass
+class SACConfig:
+    lr_actor: float = 1e-3
+    lr_critic: float = 1e-3
+    alpha: float = 0.05
+    batch: int = 24
+    action_noise: float = 0.2
+    noise_clip: float = 0.5
+
+
+def critic_defs(n_features: int, hidden: int = gnn.HIDDEN):
+    d = {
+        "inp": ParamDef((n_features + 6, hidden), (None, None), "scaled"),
+        "gat0": gnn._gat_defs(hidden, hidden),
+        "gat1": gnn._gat_defs(hidden, hidden),
+        "h1": ParamDef((hidden, hidden), (None, None), "scaled"),
+        "b1": ParamDef((hidden,), (None,), "zeros"),
+        "q1": ParamDef((hidden, 1), (None, None), "scaled"),
+        "h2": ParamDef((hidden, hidden), (None, None), "scaled"),
+        "b2": ParamDef((hidden,), (None,), "zeros"),
+        "q2": ParamDef((hidden, 1), (None, None), "scaled"),
+    }
+    return d
+
+
+def critic_forward(p, feats, adj, act_onehot):
+    """act_onehot (N,2,3) float -> (q1, q2) scalars."""
+    mask = adj > 0
+    x = jnp.concatenate([feats, act_onehot.reshape(feats.shape[0], 6)], -1)
+    h = jnp.tanh(x @ p["inp"])
+    h = gnn._gat(p["gat0"], h, mask)
+    h = gnn._gat(p["gat1"], h, mask)
+    g = h.mean(axis=0)
+    z1 = jax.nn.elu(g @ p["h1"] + p["b1"])
+    z2 = jax.nn.elu(g @ p["h2"] + p["b2"])
+    return (z1 @ p["q1"])[0], (z2 @ p["q2"])[0]
+
+
+def _adam_init(params):
+    return {"m": jax.tree.map(jnp.zeros_like, params),
+            "v": jax.tree.map(jnp.zeros_like, params),
+            "t": jnp.zeros((), jnp.int32)}
+
+
+def _adam_step(lr, params, grads, state):
+    b1, b2, eps = 0.9, 0.999, 1e-8
+    t = state["t"] + 1
+    m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads)
+    v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, state["v"], grads)
+    c1 = 1 - b1 ** t.astype(jnp.float32)
+    c2 = 1 - b2 ** t.astype(jnp.float32)
+    new = jax.tree.map(
+        lambda p, m_, v_: p - lr * (m_ / c1) / (jnp.sqrt(v_ / c2) + eps),
+        params, m, v)
+    return new, {"m": m, "v": v, "t": t}
+
+
+class SACLearner:
+    def __init__(self, feats, adj, key, cfg: SACConfig = SACConfig()):
+        self.cfg = cfg
+        self.feats, self.adj = jnp.asarray(feats), jnp.asarray(adj)
+        k1, k2 = jax.random.split(key)
+        self.actor = gnn.init_gnn(k1, feats.shape[1])
+        self.critic = init_params(critic_defs(feats.shape[1]), k2)
+        self.opt_a = _adam_init(self.actor)
+        self.opt_c = _adam_init(self.critic)
+        self.key = jax.random.PRNGKey(17)
+
+        feats_, adj_ = self.feats, self.adj
+        alpha = cfg.alpha
+
+        def critic_loss(cp, acts_oh, rewards):
+            def one(a):
+                return critic_forward(cp, feats_, adj_, a)
+            q1, q2 = jax.vmap(one)(acts_oh)
+            return jnp.mean((q1 - rewards) ** 2 + (q2 - rewards) ** 2)
+
+        def actor_loss(ap, cp):
+            logits = gnn.gnn_forward(ap, feats_, adj_)
+            probs = jax.nn.softmax(logits, axis=-1)
+            q1, q2 = critic_forward(cp, feats_, adj_, probs)
+            ent = gnn.entropy(logits)
+            return -(jnp.minimum(q1, q2) + alpha * ent), ent
+
+        def update_scan(actor, critic, oa, oc, acts, rewards, noise):
+            """All gradient steps of a generation in one jitted scan.
+            acts (U, B, N, 2) int32; rewards (U, B); noise (U, B, N, 2, 3)."""
+            def step(carry, xs):
+                actor, critic, oa, oc = carry
+                a_, r_, nz = xs
+                oh = jax.nn.one_hot(a_, 3) + nz
+                closs, cg = jax.value_and_grad(critic_loss)(critic, oh, r_)
+                critic, oc = _adam_step(cfg.lr_critic, critic, cg, oc)
+                (aloss, ent), ag = jax.value_and_grad(
+                    actor_loss, has_aux=True)(actor, critic)
+                actor, oa = _adam_step(cfg.lr_actor, actor, ag, oa)
+                return (actor, critic, oa, oc), (closs, aloss, ent)
+
+            (actor, critic, oa, oc), (cl, al, en) = jax.lax.scan(
+                step, (actor, critic, oa, oc), (acts, rewards, noise))
+            return actor, critic, oa, oc, cl[-1], al[-1], en[-1]
+
+        self._update_scan = jax.jit(update_scan)
+        self._logits = jax.jit(lambda ap: gnn.gnn_forward(ap, feats_, adj_))
+
+    def policy_logits(self, params=None):
+        return self._logits(self.actor if params is None else params)
+
+    def explore_action(self):
+        """Noisy rollout action for the PG learner's own env step."""
+        self.key, k = jax.random.split(self.key)
+        logits = self.policy_logits()
+        return np.asarray(gnn.sample_actions(k, logits))
+
+    def update(self, buffer: ReplayBuffer, steps: int) -> Dict[str, float]:
+        cfg = self.cfg
+        if len(buffer) < cfg.batch or steps <= 0:
+            return {}
+        pairs = [buffer.sample(cfg.batch) for _ in range(steps)]
+        acts = np.stack([p[0] for p in pairs])
+        rews = np.stack([p[1] for p in pairs])
+        self.key, k = jax.random.split(self.key)
+        noise = jnp.clip(
+            cfg.action_noise * jax.random.normal(
+                k, (steps, cfg.batch) + acts.shape[2:] + (3,)),
+            -cfg.noise_clip, cfg.noise_clip)
+        (self.actor, self.critic, self.opt_a, self.opt_c,
+         cl, al, en) = self._update_scan(
+            self.actor, self.critic, self.opt_a, self.opt_c,
+            jnp.asarray(acts), jnp.asarray(rews), noise)
+        return {"critic_loss": float(cl), "actor_loss": float(al),
+                "entropy": float(en)}

@@ -1,0 +1,104 @@
+"""Data pipeline: deterministic synthetic LM stream + binary token files,
+sharded global-batch assembly, background prefetch, checkpointable state.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import queue
+import threading
+from typing import Iterator, Optional
+
+import numpy as np
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass
+class DataState:
+    step: int = 0
+
+    def to_dict(self):
+        return {"step": self.step}
+
+    @classmethod
+    def from_dict(cls, d):
+        return cls(step=int(d["step"]))
+
+
+class SyntheticLM:
+    """Deterministic synthetic token stream: batch contents are a pure
+    function of (seed, step) so restarts reproduce the exact stream."""
+
+    def __init__(self, vocab: int, seq: int, global_batch: int, seed: int = 0):
+        self.vocab, self.seq, self.gb, self.seed = vocab, seq, global_batch, seed
+
+    def batch_at(self, step: int):
+        rng = np.random.Generator(np.random.Philox(key=self.seed, counter=step))
+        tok = rng.integers(0, self.vocab, size=(self.gb, self.seq + 1),
+                           dtype=np.int32)
+        return {"tokens": tok[:, :-1], "labels": tok[:, 1:]}
+
+
+class TokenFile:
+    """Flat binary token file (np.uint16/int32), sequence-packed reader."""
+
+    def __init__(self, path: str, vocab: int, seq: int, global_batch: int,
+                 dtype=np.uint16):
+        self.arr = np.memmap(path, dtype=dtype, mode="r")
+        self.vocab, self.seq, self.gb = vocab, seq, global_batch
+        self.tokens_per_batch = global_batch * (seq + 1)
+        self.n_batches = len(self.arr) // self.tokens_per_batch
+
+    def batch_at(self, step: int):
+        i = step % max(self.n_batches, 1)
+        flat = np.asarray(self.arr[i * self.tokens_per_batch:(i + 1) * self.tokens_per_batch])
+        tok = flat.reshape(self.gb, self.seq + 1).astype(np.int32) % self.vocab
+        return {"tokens": tok[:, :-1], "labels": tok[:, 1:]}
+
+
+def device_batch(batch, mesh: Optional[Mesh], batch_axes):
+    """Host numpy batch -> (sharded) jax arrays."""
+    if mesh is None:
+        return {k: jax.numpy.asarray(v) for k, v in batch.items()}
+    out = {}
+    for k, v in batch.items():
+        spec = P(batch_axes, *([None] * (v.ndim - 1)))
+        out[k] = jax.device_put(v, NamedSharding(mesh, spec))
+    return out
+
+
+class Prefetcher:
+    """Background-thread double buffering with straggler accounting."""
+
+    def __init__(self, source, start_step: int = 0, depth: int = 2):
+        self.source = source
+        self.q: "queue.Queue" = queue.Queue(maxsize=depth)
+        self.step = start_step
+        self.slow_fetches = 0
+        self._stop = threading.Event()
+        self._t = threading.Thread(target=self._run, daemon=True)
+        self._t.start()
+
+    def _run(self):
+        s = self.step
+        while not self._stop.is_set():
+            b = self.source.batch_at(s)
+            try:
+                self.q.put((s, b), timeout=1.0)
+                s += 1
+            except queue.Full:
+                continue
+
+    def next(self, timeout: float = 60.0):
+        import time
+        t0 = time.monotonic()
+        s, b = self.q.get(timeout=timeout)
+        if time.monotonic() - t0 > 0.5:
+            self.slow_fetches += 1  # input-bound step: straggler signal
+        self.step = s + 1
+        return s, b
+
+    def close(self):
+        self._stop.set()

@@ -1,0 +1,201 @@
+"""Parse compiled (post-SPMD) HLO text for collective traffic.
+
+cost_analysis() has no collective-bytes entry, so the roofline collective
+term is derived here. The parser is **while-loop aware**: collectives inside
+a scanned layer body appear once in the text but execute trip-count times,
+so we split the module into computations, detect `while` trip counts from
+their condition computations, and multiply recursively.
+
+Per-op ring-algorithm bytes per device:
+  all-gather         (n-1)/n * out_bytes
+  reduce-scatter     (n-1)   * out_bytes     (= (n-1)/n * in_bytes)
+  all-reduce         2(n-1)/n * bytes
+  all-to-all         (n-1)/n * bytes
+  collective-permute bytes
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*(\(?[\w\[\],{}\s]*?\)?)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\(")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_COMP_HDR_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->\s*.*\{\s*$")
+_CALLED_RE = re.compile(
+    r"(?:body|to_apply|condition|branch_computations)=\{?%?([\w\.\-,%\s]+)\}?")
+_WHILE_RE = re.compile(r"=\s*[\w\[\],{}\s()]*?\s*while\(")
+_CONST_RE = re.compile(r"[su]\d+\[\]\s+constant\((\d+)\)")
+
+
+def _shape_bytes(shape_txt: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_txt):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _per_device_bytes(kind: str, out_bytes: int, n: int) -> float:
+    if kind == "all-gather":
+        return out_bytes * (n - 1) / n
+    if kind == "reduce-scatter":
+        return out_bytes * (n - 1)
+    if kind == "all-reduce":
+        return 2 * out_bytes * (n - 1) / n
+    if kind == "all-to-all":
+        return out_bytes * (n - 1) / n
+    return float(out_bytes)  # collective-permute
+
+
+def _split_computations(hlo: str) -> Dict[str, List[str]]:
+    comps: Dict[str, List[str]] = {}
+    cur: Optional[str] = None
+    entry: Optional[str] = None
+    depth = 0
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        if cur is None:
+            m = _COMP_HDR_RE.match(stripped)
+            if m and stripped.endswith("{"):
+                cur = m.group(2)
+                if m.group(1):
+                    entry = cur
+                comps[cur] = []
+                depth = 1
+            continue
+        depth += stripped.count("{") - stripped.count("}")
+        if depth <= 0:
+            cur = None
+            continue
+        comps[cur].append(line)
+    if entry is not None:
+        comps["__entry__"] = comps[entry]
+    return comps
+
+
+def _analyze_comp(lines: List[str]):
+    """-> (list of collective dicts, list of (body, cond) while pairs,
+          list of called comps via call/conditional)."""
+    colls, whiles, calls = [], [], []
+    for line in lines:
+        m = _COLL_RE.search(line)
+        if m and m.group(3) != "-done":
+            out_bytes = _shape_bytes(m.group(1))
+            n = None
+            g = _GROUPS_LIST_RE.search(line)
+            if g:
+                n = len(g.group(1).split(","))
+            else:
+                g = _GROUPS_IOTA_RE.search(line)
+                if g:
+                    n = int(g.group(2))
+            if n is None or n <= 1:
+                n = 2
+            colls.append({"kind": m.group(2), "bytes": out_bytes, "group": n,
+                          "per_device_bytes": _per_device_bytes(m.group(2), out_bytes, n)})
+        if " while(" in line:
+            body = re.search(r"body=%?([\w\.\-]+)", line)
+            cond = re.search(r"condition=%?([\w\.\-]+)", line)
+            if body and cond:
+                whiles.append((body.group(1), cond.group(1)))
+            continue
+        cm = re.search(r"(?:to_apply|(?:true|false)_computation)=%?([\w\.\-]+)", line)
+        if cm:
+            calls.append(cm.group(1))
+        bm = re.search(r"branch_computations=\{([^}]*)\}", line)
+        if bm:
+            calls += [c.strip().lstrip("%") for c in bm.group(1).split(",")]
+    return colls, whiles, calls
+
+
+def _trip_count(cond_lines: List[str]) -> int:
+    consts = [int(c) for line in cond_lines for c in _CONST_RE.findall(line)]
+    return max(consts) if consts else 1
+
+
+def analyze_collectives(hlo_text: str) -> Dict:
+    comps = _split_computations(hlo_text)
+    parsed = {name: _analyze_comp(lines) for name, lines in comps.items()
+              if name != "__entry__"}
+    trip_cache: Dict[str, int] = {}
+
+    def trips(cond_name: str) -> int:
+        if cond_name not in trip_cache:
+            trip_cache[cond_name] = _trip_count(
+                comps.get(cond_name, []))
+        return trip_cache[cond_name]
+
+    memo: Dict[str, Dict] = {}
+
+    def total(name: str, stack=()) -> Dict:
+        if name in memo:
+            return memo[name]
+        if name not in parsed or name in stack:
+            return {"bytes": 0.0, "by_kind": {}, "count": 0}
+        colls, whiles, calls = parsed[name]
+        by_kind = defaultdict(lambda: {"count": 0.0, "per_device_bytes": 0.0})
+        tot, cnt = 0.0, 0
+        for c in colls:
+            by_kind[c["kind"]]["count"] += 1
+            by_kind[c["kind"]]["per_device_bytes"] += c["per_device_bytes"]
+            tot += c["per_device_bytes"]
+            cnt += 1
+        for body, cond in whiles:
+            t = trips(cond)
+            sub = total(body, stack + (name,))
+            tot += t * sub["bytes"]
+            cnt += t * sub["count"]
+            for k, v in sub["by_kind"].items():
+                by_kind[k]["count"] += t * v["count"]
+                by_kind[k]["per_device_bytes"] += t * v["per_device_bytes"]
+        for cal in calls:
+            sub = total(cal, stack + (name,))
+            tot += sub["bytes"]
+            cnt += sub["count"]
+            for k, v in sub["by_kind"].items():
+                by_kind[k]["count"] += v["count"]
+                by_kind[k]["per_device_bytes"] += v["per_device_bytes"]
+        memo[name] = {"bytes": tot, "by_kind": dict(by_kind), "count": cnt}
+        return memo[name]
+
+    entry_name = None
+    for line in hlo_text.splitlines():
+        if line.startswith("ENTRY"):
+            m = re.search(r"ENTRY\s+%?([\w\.\-]+)", line)
+            if m:
+                entry_name = m.group(1)
+            break
+    if entry_name is None or entry_name not in parsed:
+        # fall back: flat sum over all computations (over-counts nothing,
+        # under-counts loop trips)
+        agg = {"bytes": 0.0, "by_kind": {}, "count": 0}
+        for name in parsed:
+            sub = total(name)
+        entry = max(memo.values(), key=lambda d: d["bytes"], default=agg)
+        return {"total_per_device_bytes": entry["bytes"],
+                "by_kind": entry["by_kind"], "n_ops": entry["count"],
+                "note": "entry not found; used max computation"}
+    res = total(entry_name)
+    return {"total_per_device_bytes": res["bytes"], "by_kind": res["by_kind"],
+            "n_ops": res["count"]}
+
+
+def collective_summary(hlo_text: str) -> Dict:
+    return analyze_collectives(hlo_text)

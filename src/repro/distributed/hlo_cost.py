@@ -1,0 +1,249 @@
+"""Trip-count-aware FLOP/byte accounting from post-SPMD HLO text.
+
+compiled.cost_analysis() counts each while-loop body ONCE, so any model
+with scanned layers / microbatches under-reports flops and bytes by the
+trip counts. This module re-derives both terms structurally:
+
+- FLOPs: every `dot` (incl. inside fusion bodies) contributes
+  2 * prod(output dims) * prod(lhs contracting dims); whiles multiply by
+  their trip count (max constant in the condition computation).
+- HBM bytes: classic roofline model over the *scheduled, fused* module —
+  each top-level instruction reads its operands and writes its output once
+  (fusion internals are free/VMEM), again trip-count weighted. Elementwise
+  ops are included (they are real HBM traffic on TPU); get-tuple-element /
+  parameter / tuple / bitcast / constant are not.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+_FREE_OPS = {
+    "parameter", "get-tuple-element", "tuple", "bitcast", "constant",
+    "after-all", "iota", "copy-start", "copy-done", "partition-id",
+}
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_RES_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.*)$")
+_OP_RE = re.compile(r"\s*([a-z][a-z0-9\-]*)\(")
+
+
+def _parse_instr(line: str):
+    """Split an HLO instruction into (result, type_text, op, args_text).
+    Handles tuple-typed results containing parens and `/*index=N*/`."""
+    m = _RES_RE.match(line)
+    if not m:
+        return None
+    res, rest = m.groups()
+    if rest.startswith("("):
+        depth = 0
+        end = 0
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        shape_txt, tail = rest[:end + 1], rest[end + 1:]
+    else:
+        sp = rest.find(" ")
+        if sp < 0:
+            return None
+        shape_txt, tail = rest[:sp], rest[sp:]
+    mo = _OP_RE.match(tail)
+    if not mo:
+        return None
+    return res, shape_txt, mo.group(1), tail[mo.end():]
+_COMP_HDR_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->\s*.*\{\s*$")
+_CONST_RE = re.compile(r"[su]\d+\[\]\s+constant\((\d+)\)")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+_LHS_C_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+
+def _shape_info(shape_txt: str) -> Tuple[int, List[Tuple[str, List[int]]]]:
+    total = 0
+    shapes = []
+    for dtype, dims in _SHAPE_RE.findall(shape_txt):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        dl = [int(d) for d in dims.split(",") if d]
+        n = 1
+        for d in dl:
+            n *= d
+        total += n * _DTYPE_BYTES[dtype]
+        shapes.append((dtype, dl))
+    return total, shapes
+
+
+def _root_dus_update_bytes(comp_rec) -> "Optional[int]":
+    """If a fused computation's root is a dynamic-update-slice, return the
+    byte size of its update operand (else None)."""
+    if not comp_rec or not comp_rec["instrs"]:
+        return None
+    root = None
+    for ins in comp_rec["instrs"]:
+        if "ROOT" in ins["line"] or ins is comp_rec["instrs"][-1]:
+            root = ins
+    if root is None or root["op"] != "dynamic-update-slice":
+        return None
+    if len(root["operands"]) > 1:
+        return comp_rec["syms"].get(root["operands"][1], (0,))[0]
+    return 0
+
+
+def _fusion_has_slice(comp_rec) -> bool:
+    """Fused dynamic-slice: the fusion reads a slice of its big operand,
+    not the whole buffer — charge by result size instead."""
+    if not comp_rec:
+        return False
+    return any(i["op"] == "dynamic-slice" for i in comp_rec["instrs"])
+
+
+def analyze_cost(hlo_text: str) -> Dict[str, float]:
+    # ---- split into computations, keep instruction lines
+    comps: Dict[str, List[str]] = {}
+    cur = None
+    entry = None
+    depth = 0
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if cur is None:
+            m = _COMP_HDR_RE.match(s)
+            if m and s.endswith("{"):
+                cur = m.group(2)
+                if m.group(1):
+                    entry = cur
+                comps[cur] = []
+                depth = 1
+            continue
+        depth += s.count("{") - s.count("}")
+        if depth <= 0:
+            cur = None
+            continue
+        comps[cur].append(s)
+
+    # ---- per computation: symbol table + instruction records
+    parsed: Dict[str, dict] = {}
+    for name, lines in comps.items():
+        syms: Dict[str, Tuple[int, list]] = {}
+        instrs = []
+        for line in lines:
+            m = _parse_instr(line)
+            if not m:
+                continue
+            res, shape_txt, op, rest = m
+            bytes_, shapes = _shape_info(shape_txt)
+            syms[res] = (bytes_, shapes)
+            # operands: %refs inside the call parens (first level)
+            par = rest.split(")", 1)[0]
+            operands = _OPERAND_RE.findall(par)
+            instrs.append({"res": res, "op": op, "bytes": bytes_,
+                           "shapes": shapes, "operands": operands,
+                           "line": line})
+        parsed[name] = {"syms": syms, "instrs": instrs}
+
+    def sym_bytes(comp: str, name: str) -> int:
+        return parsed[comp]["syms"].get(name, (0, []))[0]
+
+    def dot_flops(comp: str, ins) -> float:
+        out_elems = 1
+        for _, dl in ins["shapes"]:
+            for d in dl:
+                out_elems *= d
+        lhs = ins["operands"][0] if ins["operands"] else None
+        k = 1
+        mc = _LHS_C_RE.search(ins["line"])
+        if lhs and mc and lhs in parsed[comp]["syms"]:
+            _, lshapes = parsed[comp]["syms"][lhs]
+            if lshapes:
+                dims = lshapes[0][1]
+                for ci in (int(x) for x in mc.group(1).split(",") if x):
+                    if ci < len(dims):
+                        k *= dims[ci]
+        return 2.0 * out_elems * k
+
+    def trip(cond: str) -> int:
+        consts = [int(c) for line in comps.get(cond, [])
+                  for c in _CONST_RE.findall(line)]
+        return max(consts) if consts else 1
+
+    memo: Dict[str, Tuple[float, float]] = {}
+
+    def cost(comp: str, stack=()) -> Tuple[float, float]:
+        """-> (flops, hbm_bytes) of one execution of `comp` (top level)."""
+        if comp in memo:
+            return memo[comp]
+        if comp not in parsed or comp in stack:
+            return (0.0, 0.0)
+        fl, by = 0.0, 0.0
+        for ins in parsed[comp]["instrs"]:
+            op = ins["op"]
+            if op == "dot":
+                fl += dot_flops(comp, ins)
+            if op == "while":
+                body = re.search(r"body=%?([\w\.\-]+)", ins["line"])
+                cond = re.search(r"condition=%?([\w\.\-]+)", ins["line"])
+                if body and cond:
+                    t = trip(cond.group(1))
+                    f2, b2 = cost(body.group(1), stack + (comp,))
+                    fl += t * f2
+                    by += t * b2
+                continue
+            if op in ("fusion", "call", "custom-call", "map", "reduce",
+                      "sort", "scatter", "conditional", "select-and-scatter"):
+                fused_slice = False
+                for cm_ in re.findall(
+                        r"(?:calls|to_apply|(?:true|false)_computation)=%?([\w\.\-]+)",
+                        ins["line"]):
+                    f2, b2 = cost(cm_, stack + (comp,))
+                    fl += f2  # fusion internals: flops real, bytes stay VMEM
+                    # fused in-place slice update: charge the update, not
+                    # the whole carried buffer (decode cache pattern)
+                    root = _root_dus_update_bytes(parsed.get(cm_))
+                    if root is not None:
+                        by += 2 * root
+                        fused_slice = True
+                    elif _fusion_has_slice(parsed.get(cm_)):
+                        by += 2 * ins["bytes"]
+                        fused_slice = True
+                if fused_slice:
+                    continue
+                bm = re.search(r"branch_computations=\{([^}]*)\}", ins["line"])
+                if bm:
+                    for c2 in bm.group(1).split(","):
+                        f2, b2 = cost(c2.strip().lstrip("%"), stack + (comp,))
+                        fl += f2
+                        by += b2
+            if op in _FREE_OPS:
+                continue
+            # pure dtype-conversion traffic is an XLA:CPU legalization
+            # artifact (bf16 dots upcast to f32) — not HBM traffic on TPU
+            if "convert" in ins["res"] or "convert" in ins["line"].split(
+                    "calls=")[-1][:40]:
+                continue
+            if op == "dynamic-update-slice":
+                # in-place slice write: traffic = the update, not the buffer
+                upd = (sym_bytes(comp, ins["operands"][1])
+                       if len(ins["operands"]) > 1 else ins["bytes"])
+                by += 2 * upd
+                continue
+            if op == "dynamic-slice":
+                by += 2 * ins["bytes"]  # read slice + write result
+                continue
+            # HBM traffic: output + distinct operands
+            by += ins["bytes"]
+            for o in set(ins["operands"]):
+                by += sym_bytes(comp, o)
+        memo[comp] = (fl, by)
+        return memo[comp]
+
+    if entry is None:
+        return {"flops": 0.0, "hbm_bytes": 0.0}
+    fl, by = cost(entry)
+    return {"flops": fl, "hbm_bytes": by}

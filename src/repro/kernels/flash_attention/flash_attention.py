@@ -1,0 +1,94 @@
+"""Pallas TPU flash-attention kernel (target: v5e MXU).
+
+Tiling: grid (batch*heads, n_q_blocks, n_kv_blocks); the kv dimension is the
+minor (sequential) grid axis so the online-softmax state lives in VMEM
+scratch across kv steps. Blocks are (bq, d) x (bk, d) with d the head dim
+(128 on all assigned archs -> MXU-aligned); bq/bk default 128/256 so the
+working set (q + k + v + p + acc ~ bq*d*4 + 2*bk*d*2 + bq*bk*4) stays well
+under VMEM.
+
+Validated in interpret mode against ref.py (pure-jnp oracle) over
+shape/dtype sweeps in tests/test_kernels.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            bq: int, bk: int, n_kv: int, causal: bool, scale: float):
+    i_kv = pl.program_id(2)
+
+    @pl.when(i_kv == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, -1e30)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32) * scale          # (bq, d)
+    k = k_ref[0]                                      # (bk, d)
+    v = v_ref[0]
+    s = jax.lax.dot_general(q.astype(q_ref.dtype), k,
+                            (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (bq, bk)
+    if causal:
+        qi = pl.program_id(1) * bq + jax.lax.broadcasted_iota(
+            jnp.int32, (bq, bk), 0)
+        ki = i_kv * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        s = jnp.where(qi >= ki, s, -1e30)
+
+    m_prev, l_prev = m_scr[...], l_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    alpha = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_prev * alpha + p.sum(axis=-1)
+    acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(i_kv == n_kv - 1)
+    def _done():
+        o_ref[0] = (acc_scr[...]
+                    / jnp.maximum(l_scr[...], 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q, k, v, *, causal: bool = True, bq: int = 128,
+                           bk: int = 256, interpret: bool = True):
+    """q, k, v: (BH, S, d) flat over batch*heads. Returns (BH, S, d).
+
+    The MXU wants d a multiple of 128 and bq/bk multiples of 8/128; callers
+    (ops.py) pad and expand GQA before reaching here.
+    """
+    BH, Sq, d = q.shape
+    Sk = k.shape[1]
+    bq = min(bq, Sq)
+    bk = min(bk, Sk)
+    assert Sq % bq == 0 and Sk % bk == 0, (Sq, bq, Sk, bk)
+    nq, nk = Sq // bq, Sk // bk
+    scale = d ** -0.5
+
+    kern = functools.partial(_kernel, bq=bq, bk=bk, n_kv=nk, causal=causal,
+                             scale=scale)
+    return pl.pallas_call(
+        kern,
+        grid=(BH, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, iq, ik: (b, iq, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, iq, ik: (b, ik, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, iq, ik: (b, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda b, iq, ik: (b, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),     # running max
+            pltpu.VMEM((bq,), jnp.float32),     # running denominator
+            pltpu.VMEM((bq, d), jnp.float32),   # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,33 @@
+"""jit'd public wrapper: GQA handling + padding + dispatch to the Pallas
+kernel (interpret on CPU, compiled on TPU) or the pure-XLA custom-VJP path
+in repro.models.attention."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import flash_attention_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, interpret: bool = True):
+    """q (B,Sq,K,G,h); k,v (B,Sk,K,h) -> (B,Sq,K,G,h).
+
+    GQA is lowered by expanding KV to the full head count (HBM-cheap for
+    the kernel's operands; the kernel itself is head-flat).
+    """
+    B, Sq, K, G, h = q.shape
+    Sk = k.shape[1]
+    kx = jnp.repeat(k, G, axis=2)
+    vx = jnp.repeat(v, G, axis=2)
+    qf = q.reshape(B, Sq, K * G, h).transpose(0, 2, 1, 3).reshape(-1, Sq, h)
+    kf = kx.transpose(0, 2, 1, 3).reshape(-1, Sk, h)
+    vf = vx.transpose(0, 2, 1, 3).reshape(-1, Sk, h)
+    bq = min(128, Sq)
+    bk = min(256, Sk)
+    o = flash_attention_pallas(qf, kf, vf, causal=causal, bq=bq, bk=bk,
+                               interpret=interpret)
+    return o.reshape(B, K * G, Sq, h).transpose(0, 2, 1, 3).reshape(
+        B, Sq, K, G, h)

@@ -1,0 +1,66 @@
+"""Pallas TPU kernel for fused GAT message passing (the EGRL policy's hot
+op): per node block, compute masked attention scores against ALL nodes,
+softmax over neighbors and aggregate — one VMEM-resident fusion instead of
+four HBM round-trips (scores / mask / softmax / matmul).
+
+Workload graphs are <= ~1k nodes, so the full (N, H, hd) node-feature
+tensor (~0.5 MB at N=1024, D=128) sits in VMEM; the grid tiles only the
+destination nodes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(z_ref, esrc_ref, edst_ref, adj_ref, o_ref, *, heads: int):
+    z = z_ref[...]                        # (N, H*hd) all nodes
+    e_dst = edst_ref[...]                 # (N, H)
+    e_src = esrc_ref[...]                 # (bn, H) this block's nodes
+    adj = adj_ref[...]                    # (bn, N)
+    N, D = z.shape
+    hd = D // heads
+    bn = e_src.shape[0]
+
+    s = e_src[:, None, :] + e_dst[None, :, :]           # (bn, N, H)
+    s = jnp.where(s > 0, s, 0.2 * s)                    # leaky_relu
+    s = jnp.where(adj[:, :, None] > 0, s, -1e30)
+    s = s - s.max(axis=1, keepdims=True)
+    p = jnp.exp(s)
+    p = p / jnp.maximum(p.sum(axis=1, keepdims=True), 1e-30)  # (bn, N, H)
+
+    zh = z.reshape(N, heads, hd)
+    # batch the head dim through dot_general: (H, bn, N) x (H, N, hd)
+    out = jax.lax.dot_general(
+        p.transpose(2, 0, 1), zh.transpose(1, 0, 2),
+        (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)             # (H, bn, hd)
+    o_ref[...] = out.transpose(1, 0, 2).reshape(bn, D).astype(o_ref.dtype)
+
+
+def gat_mp_pallas(z, e_src, e_dst, adj, *, heads: int, block: int = 128,
+                  interpret: bool = True):
+    """z (N, D); e_src/e_dst (N, H); adj (N, N) -> aggregated (N, D).
+
+    N is padded to a multiple of `block` by the ops.py wrapper.
+    """
+    N, D = z.shape
+    bn = min(block, N)
+    assert N % bn == 0
+    kern = functools.partial(_kernel, heads=heads)
+    return pl.pallas_call(
+        kern,
+        grid=(N // bn,),
+        in_specs=[
+            pl.BlockSpec((N, D), lambda i: (0, 0)),
+            pl.BlockSpec((bn, heads), lambda i: (i, 0)),
+            pl.BlockSpec((N, heads), lambda i: (0, 0)),
+            pl.BlockSpec((bn, N), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, D), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((N, D), z.dtype),
+        interpret=interpret,
+    )(z, e_src, e_dst, adj)

@@ -1,0 +1,25 @@
+"""jit'd wrapper with N-padding for the fused GAT kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.gat_mp.gat_mp import gat_mp_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("heads", "block", "interpret"))
+def gat_mp(z, e_src, e_dst, adj, *, heads: int, block: int = 128,
+           interpret: bool = True):
+    N, D = z.shape
+    pad = (-N) % block
+    if pad:
+        z = jnp.pad(z, ((0, pad), (0, 0)))
+        e_src = jnp.pad(e_src, ((0, pad), (0, 0)))
+        e_dst = jnp.pad(e_dst, ((0, pad), (0, 0)))
+        adj = jnp.pad(adj, ((0, pad), (0, pad)))
+        adj = adj.at[jnp.arange(N, N + pad), jnp.arange(N, N + pad)].set(1.0)
+    out = gat_mp_pallas(z, e_src, e_dst, adj, heads=heads, block=block,
+                        interpret=interpret)
+    return out[:N]

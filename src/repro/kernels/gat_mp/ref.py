@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the fused GAT message-passing kernel — the same
+math as repro.core.gnn._gat's attention+aggregate (pre-residual)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gat_mp_ref(z, e_src, e_dst, adj, *, heads: int):
+    N, D = z.shape
+    hd = D // heads
+    zh = z.reshape(N, heads, hd)
+    e = jax.nn.leaky_relu(e_src[:, None, :] + e_dst[None, :, :], 0.2)
+    e = jnp.where(adj[:, :, None] > 0, e, -1e30)
+    alpha = jax.nn.softmax(e, axis=1)
+    return jnp.einsum("njh,jhd->nhd", alpha, zh).reshape(N, D)

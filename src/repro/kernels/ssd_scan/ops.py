@@ -1,0 +1,22 @@
+"""jit'd wrapper: derive (xd, la) from mamba2 block tensors and dispatch
+to the Pallas kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan.ssd_scan import ssd_scan_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x, dt, A_log, B_, C_, *, chunk: int = 128,
+             interpret: bool = True):
+    """x (B,S,H,hd); dt (B,S,H) post-softplus; A_log (H,); B_/C_ (B,S,N)."""
+    A = -jnp.exp(A_log.astype(jnp.float32))
+    la = dt.astype(jnp.float32) * A
+    xd = x.astype(jnp.float32) * dt.astype(jnp.float32)[..., None]
+    return ssd_scan_pallas(xd, la, B_.astype(jnp.float32),
+                           C_.astype(jnp.float32), chunk=chunk,
+                           interpret=interpret)

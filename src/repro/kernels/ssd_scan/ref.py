@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the SSD chunked scan (same math as
+repro.models.mamba2.ssd_chunked, phrased on the kernel's operands)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_scan_ref(xd, la, B_, C_):
+    """Sequential (exact) recurrence. xd (B,S,H,hd); la (B,S,H);
+    B_/C_ (B,S,N). Returns (y, final_state (B,H,N,hd))."""
+    Bb, S, H, hd = xd.shape
+    N = B_.shape[-1]
+
+    def step(state, t):
+        a = jnp.exp(la[:, t])[..., None, None]          # (B,H,1,1)
+        st = state * a + jnp.einsum("bn,bhp->bhnp", B_[:, t], xd[:, t])
+        y = jnp.einsum("bn,bhnp->bhp", C_[:, t], st)
+        return st, y
+
+    s0 = jnp.zeros((Bb, H, N, hd), jnp.float32)
+    fs, ys = jax.lax.scan(step, s0, jnp.arange(S))
+    return jnp.moveaxis(ys, 0, 1), fs

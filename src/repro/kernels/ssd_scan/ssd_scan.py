@@ -1,0 +1,98 @@
+"""Pallas TPU kernel for the Mamba2 SSD chunked scan.
+
+Grid (B, H, n_chunks) with the chunk axis minor (sequential): the running
+(N, hd) state lives in VMEM scratch across chunk steps and is reset when a
+new (batch, head) cell starts. Per step the kernel computes the
+intra-chunk quadratic part on the MXU ((Q,N)x(N,Q) and (Q,Q)x(Q,hd) dots),
+applies the carried inter-chunk state, and updates it — the TPU-native
+replacement for the CUDA selective-scan: all matmuls, one sequential axis.
+
+B_/C_ are shared across heads (n_groups=1) and are NOT duplicated: their
+BlockSpecs simply ignore the head grid index.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(xd_ref, la_ref, b_ref, c_ref, o_ref, fs_ref, state_scr, *,
+            Q: int, n_chunks: int):
+    i_c = pl.program_id(2)
+
+    @pl.when(i_c == 0)
+    def _reset():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    xd = xd_ref[0, :, 0, :].astype(jnp.float32)        # (Q, hd) x*dt
+    la = la_ref[0, :, 0].astype(jnp.float32)           # (Q,) log decay
+    B_ = b_ref[0].astype(jnp.float32)                  # (Q, N)
+    C_ = c_ref[0].astype(jnp.float32)                  # (Q, N)
+
+    cum = jnp.cumsum(la)                               # (Q,)
+    total = cum[-1]
+
+    # intra-chunk: (C B^T * decay_mask) @ xd
+    cb = jax.lax.dot_general(C_, B_, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (Q,Q)
+    ii = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    decay = jnp.where(ii >= jj, jnp.exp(cum[:, None] - cum[None, :]), 0.0)
+    y = jax.lax.dot_general(cb * decay, xd, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)   # (Q,hd)
+
+    # inter-chunk: previous state contribution
+    prev = state_scr[...]                               # (N, hd)
+    y = y + jnp.exp(cum)[:, None] * jax.lax.dot_general(
+        C_, prev, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    # state update: S <- exp(total) S + B^T @ (xd * exp(total - cum))
+    contrib = jax.lax.dot_general(
+        B_ * jnp.exp(total - cum)[:, None], xd, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)             # (N, hd)
+    state_scr[...] = jnp.exp(total) * prev + contrib
+
+    o_ref[0, :, 0, :] = y.astype(o_ref.dtype)
+
+    @pl.when(i_c == n_chunks - 1)
+    def _emit_state():
+        fs_ref[0, 0] = state_scr[...].astype(fs_ref.dtype)
+
+
+def ssd_scan_pallas(xd, la, B_, C_, *, chunk: int, interpret: bool = True):
+    """xd (B,S,H,hd) = x*dt; la (B,S,H) log decay; B_/C_ (B,S,N).
+
+    Returns (y (B,S,H,hd) , final_state (B,H,N,hd)).
+    """
+    Bb, S, H, hd = xd.shape
+    N = B_.shape[-1]
+    Q = min(chunk, S)
+    assert S % Q == 0
+    nc = S // Q
+
+    kern = functools.partial(_kernel, Q=Q, n_chunks=nc)
+    y, fs = pl.pallas_call(
+        kern,
+        grid=(Bb, H, nc),
+        in_specs=[
+            pl.BlockSpec((1, Q, 1, hd), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, Q, 1), lambda b, h, c: (b, c, h)),
+            pl.BlockSpec((1, Q, N), lambda b, h, c: (b, c, 0)),
+            pl.BlockSpec((1, Q, N), lambda b, h, c: (b, c, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, Q, 1, hd), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, 1, N, hd), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bb, S, H, hd), xd.dtype),
+            jax.ShapeDtypeStruct((Bb, H, N, hd), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((N, hd), jnp.float32)],
+        interpret=interpret,
+    )(xd, la, B_, C_)
+    return y, fs

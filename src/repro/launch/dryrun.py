@@ -1,0 +1,162 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# NOTE: the two lines above MUST run before any jax import (jax locks the
+# device count on first init). Everything else follows.
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro.configs.registry import ARCH_IDS, SHAPES, all_cells  # noqa: E402
+from repro.distributed.hlo_analysis import collective_summary  # noqa: E402
+from repro.distributed.hlo_cost import analyze_cost  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.programs import lower_cell  # noqa: E402
+
+HBM_PER_CHIP = 16 * 1024 ** 3  # v5e
+
+
+def _cpu_upcast_overhead(hlo_text: str, min_bytes: int = 64 * 2 ** 20) -> int:
+    """XLA:CPU legalizes bf16 dots by upcasting operands to f32 and hoists
+    those converts onto whole loop-carried buffers — copies that do NOT
+    exist on TPU (the MXU consumes bf16 natively). Measured root-cause
+    analysis in EXPERIMENTS.md §Perf. This counts, once per shape, every
+    large f32 buffer that has an identically-shaped bf16 twin — a
+    conservative estimate of the CPU-only inflation, reported alongside the
+    raw number as `hbm_projected_tpu`."""
+    import re
+    f32, bf16 = {}, set()
+    for line in hlo_text.splitlines():
+        m = re.match(r"\s*%?[\w\.\-]+ = (f32|bf16)\[([\d,]+)\]", line)
+        if not m:
+            continue
+        dt, dims = m.group(1), m.group(2)
+        n = 1
+        for d in dims.split(","):
+            n *= int(d)
+        if dt == "f32" and n * 4 >= min_bytes:
+            f32[dims] = n * 4
+        elif dt == "bf16" and n * 2 >= min_bytes // 2:
+            bf16.add(dims)
+    return sum(v for k, v in f32.items() if k in bf16)
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, outdir=None,
+             overrides=None, verbose=True, tag=""):
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    t0 = time.time()
+    with mesh:
+        lowered, meta = lower_cell(arch, shape, mesh, overrides)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll = collective_summary(hlo)
+    tripaware = analyze_cost(hlo)
+    per_dev = (mem.argument_size_in_bytes + mem.output_size_in_bytes
+               - mem.alias_size_in_bytes + mem.temp_size_in_bytes)
+    upcast = _cpu_upcast_overhead(hlo)
+    projected = max(0, per_dev - upcast)
+    rec = {
+        "arch": arch, "shape": shape,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_chips": n_chips,
+        "fits_hbm": bool(per_dev <= HBM_PER_CHIP),
+        "fits_hbm_tpu_projected": bool(projected <= HBM_PER_CHIP),
+        "per_device_bytes": int(per_dev),
+        "cpu_upcast_overhead_bytes": int(upcast),
+        "hbm_projected_tpu_bytes": int(projected),
+        "memory_analysis": {
+            "argument_bytes": int(mem.argument_size_in_bytes),
+            "output_bytes": int(mem.output_size_in_bytes),
+            "alias_bytes": int(mem.alias_size_in_bytes),
+            "temp_bytes": int(mem.temp_size_in_bytes),
+        },
+        "cost_analysis": {
+            "flops_per_device": float(cost.get("flops", 0.0)),
+            "bytes_accessed_per_device": float(cost.get("bytes accessed", 0.0)),
+            # trip-count-aware re-derivation (scanned layers execute L times
+            # but cost_analysis counts while bodies once):
+            "flops_tripaware": tripaware["flops"],
+            "hbm_bytes_tripaware": tripaware["hbm_bytes"],
+        },
+        "collectives": coll,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "overrides": {k: str(v) for k, v in (overrides or {}).items()},
+    }
+    if verbose:
+        print(f"--- {arch} x {shape} on {rec['mesh']} ---")
+        print(mem)
+        print({k: v for k, v in cost.items()
+               if k in ("flops", "bytes accessed", "optimal_seconds")})
+        print(f"collective bytes/device: {coll['total_per_device_bytes']:.3e} "
+              f"({coll['n_ops']} ops)")
+        print(f"per-device HBM: {per_dev / 2**30:.2f} GiB measured "
+              f"({'fits' if rec['fits_hbm'] else 'does not fit'}); "
+              f"{projected / 2**30:.2f} GiB TPU-projected "
+              f"({'fits' if rec['fits_hbm_tpu_projected'] else 'DOES NOT FIT'})"
+              f"  lower {t_lower:.1f}s compile {t_compile:.1f}s")
+    if outdir:
+        os.makedirs(outdir, exist_ok=True)
+        name = f"{arch}__{shape}__{rec['mesh']}{tag}.json"
+        with open(os.path.join(outdir, name), "w") as f:
+            json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser(description="multi-pod dry-run")
+    ap.add_argument("--arch", default=None, choices=list(ARCH_IDS) + [None])
+    ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true", help="all 40 cells")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    cells = []
+    if args.all:
+        for a, s, ok, why in all_cells(include_skipped=True):
+            if ok:
+                cells.append((a, s))
+            else:
+                print(f"SKIP {a} x {s}: {why}")
+    else:
+        archs = [args.arch] if args.arch else list(ARCH_IDS)
+        shapes = [args.shape] if args.shape else list(SHAPES)
+        from repro.configs.registry import get_config
+        from repro.configs.base import supports_shape, SHAPES as SH
+        for a in archs:
+            for s in shapes:
+                ok, why = supports_shape(get_config(a), SH[s])
+                if ok:
+                    cells.append((a, s))
+                else:
+                    print(f"SKIP {a} x {s}: {why}")
+
+    failures = []
+    for a, s in cells:
+        for mp in meshes:
+            try:
+                run_cell(a, s, mp, outdir=args.out)
+            except Exception as e:  # noqa: BLE001
+                failures.append((a, s, mp, repr(e)))
+                print(f"FAIL {a} x {s} multi_pod={mp}: {e}")
+                traceback.print_exc()
+    print(f"\n{len(cells) * len(meshes) - len(failures)} ok, "
+          f"{len(failures)} failed")
+    for f_ in failures:
+        print("  FAILED:", f_)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,17 @@
+"""Production mesh builders. Functions, not module constants, so importing
+this module never touches jax device state (dry-run must set XLA_FLAGS
+before first jax init)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape, axes):
+    """Arbitrary mesh (tests use small shapes like (2, 4))."""
+    return jax.make_mesh(tuple(shape), tuple(axes))

@@ -1,0 +1,156 @@
+"""Build the (jit-able fn, abstract kwargs, donate) triple for every
+(arch x shape x mesh) cell — shared by dryrun, roofline and the launchers.
+
+All inputs are ShapeDtypeStructs with NamedShardings attached (no device
+allocation): train cells lower `train_step`, decode cells lower
+`serve_step` (one token against a seq_len KV cache), prefill cells lower
+the prefill program.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeCfg
+from repro.configs.registry import get_config, get_shape
+from repro.distributed.rules import ShardingPlan, make_plan
+from repro.models.zoo import get_model
+from repro.training import optimizers as opt
+from repro.training.train_step import make_train_step
+from repro.utils.params import abstract_params, make_specs
+
+
+def _with_sharding(abstract, specs, mesh: Mesh):
+    def one(a, s):
+        return jax.ShapeDtypeStruct(a.shape, a.dtype,
+                                    sharding=NamedSharding(mesh, s))
+    return jax.tree.map(one, abstract, specs,
+                        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeCfg, plan: ShardingPlan,
+                mesh: Mesh) -> Dict[str, jax.ShapeDtypeStruct]:
+    B, S = shape.global_batch, shape.seq_len
+    tok = jax.ShapeDtypeStruct(
+        (B, S), jnp.int32, sharding=NamedSharding(mesh, P(plan.batch_axes, None)))
+    out = {"tokens": tok, "labels": tok}
+    if cfg.family == "encdec":
+        out["enc_emb"] = jax.ShapeDtypeStruct(
+            (B, S, cfg.d_model), jnp.bfloat16,
+            sharding=NamedSharding(mesh, P(plan.batch_axes, None, None)))
+    return out
+
+
+def cache_specs(model, cfg: ModelConfig, plan: ShardingPlan):
+    """PartitionSpec pytree mirroring model.cache_struct output."""
+    cs = plan.cache_spec()  # (L,B,S,K,h)
+    if cfg.family in ("dense", "moe", "vlm"):
+        return {"k": cs, "v": cs}
+    if cfg.family == "ssm":
+        inner = "model" if plan.rules.get("ssm_inner") else None
+        head = "model" if plan.rules.get("ssm_head") else None
+        return {
+            "conv_x": P(None, plan.cache_batch, None, inner),
+            "conv_B": P(None, plan.cache_batch, None, None),
+            "conv_C": P(None, plan.cache_batch, None, None),
+            "state": P(None, plan.cache_batch, head, None, None),
+        }
+    if cfg.family == "hybrid":
+        inner = "model" if plan.rules.get("ssm_inner") else None
+        head = "model" if plan.rules.get("ssm_head") else None
+        return {
+            "conv_x": P(None, plan.cache_batch, None, inner),
+            "conv_B": P(None, plan.cache_batch, None, None),
+            "conv_C": P(None, plan.cache_batch, None, None),
+            "state": P(None, plan.cache_batch, head, None, None),
+            "attn_k": cs, "attn_v": cs,
+        }
+    if cfg.family == "encdec":
+        return {"k": cs, "v": cs, "xk": cs, "xv": cs}
+    raise ValueError(cfg.family)
+
+
+def build_cell(arch: str, shape_name: str, mesh: Mesh,
+               overrides: Optional[dict] = None):
+    """Returns (fn, kwargs, donate_argnames, meta)."""
+    cfg = get_config(arch)
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    shape = get_shape(shape_name)
+    plan = make_plan(cfg, mesh, shape)
+    model = get_model(cfg, plan)
+
+    defs = model.param_defs()
+    p_abs = abstract_params(defs)
+    p_specs = make_specs(defs, plan.rules)
+    p_in = _with_sharding(p_abs, p_specs, mesh)
+    meta = {"arch": arch, "shape": shape_name, "cfg": cfg, "plan": plan,
+            "model": model, "param_specs": p_specs}
+
+    if shape.kind == "train":
+        train_step, opt_init, ocfg = make_train_step(model, cfg, plan)
+        o_abs = jax.eval_shape(opt_init, p_abs)
+        o_specs = opt.state_specs(cfg.optimizer, ocfg, p_specs, p_abs)
+        o_in = _with_sharding(o_abs, o_specs, mesh)
+        b_in = batch_specs(cfg, shape, plan, mesh)
+        step = jax.ShapeDtypeStruct((), jnp.int32,
+                                    sharding=NamedSharding(mesh, P()))
+        kwargs = {"params": p_in, "opt_state": o_in, "batch": b_in, "step": step}
+
+        def fn(params, opt_state, batch, step):
+            return train_step(params, opt_state, batch, step)
+
+        return fn, kwargs, ("params", "opt_state"), meta
+
+    if shape.kind == "prefill":
+        B, S = shape.global_batch, shape.seq_len
+        if cfg.family == "encdec":
+            inp = jax.ShapeDtypeStruct(
+                (B, S, cfg.d_model), jnp.bfloat16,
+                sharding=NamedSharding(mesh, P(plan.batch_axes, None, None)))
+        else:
+            inp = jax.ShapeDtypeStruct(
+                (B, S), jnp.int32,
+                sharding=NamedSharding(mesh, P(plan.batch_axes, None)))
+        kwargs = {"params": p_in, "inputs": inp}
+        # constrain the produced cache's sharding (otherwise XLA replicates
+        # the 50+ GiB KV cache on every chip)
+        c_specs = cache_specs(model, cfg, plan)
+        c_shard = jax.tree.map(lambda s: NamedSharding(mesh, s), c_specs,
+                               is_leaf=lambda x: isinstance(x, P))
+        meta["out_shardings"] = (c_shard, None)
+
+        def fn(params, inputs):
+            return model.prefill(params, inputs, S)
+
+        return fn, kwargs, (), meta
+
+    # decode: one new token against a seq_len cache
+    B, S = shape.global_batch, shape.seq_len
+    c_abs = model.cache_struct(B, S)
+    c_specs = cache_specs(model, cfg, plan)
+    c_in = _with_sharding(c_abs, c_specs, mesh)
+    tok = jax.ShapeDtypeStruct((B,), jnp.int32,
+                               sharding=NamedSharding(mesh, P(plan.batch_axes)))
+    pos = jax.ShapeDtypeStruct((), jnp.int32, sharding=NamedSharding(mesh, P()))
+    kwargs = {"params": p_in, "cache": c_in, "token": tok, "pos": pos}
+
+    def fn(params, cache, token, pos):
+        return model.decode_step(params, cache, token, pos)
+
+    return fn, kwargs, ("cache",), meta
+
+
+def lower_cell(arch: str, shape_name: str, mesh: Mesh,
+               overrides: Optional[dict] = None):
+    fn, kwargs, donate, meta = build_cell(arch, shape_name, mesh, overrides)
+    jit_kw = {}
+    if meta.get("out_shardings") is not None:
+        jit_kw["out_shardings"] = meta["out_shardings"]
+    jitted = jax.jit(fn, donate_argnames=donate, **jit_kw)
+    lowered = jitted.lower(**kwargs)
+    return lowered, meta

@@ -1,0 +1,138 @@
+"""Training launcher: real loop with checkpoint/restart, preemption
+handling, deterministic data, straggler accounting and metrics logging.
+
+On this CPU container it runs reduced configs end-to-end (examples/ use it
+to train a ~100M model); on a real cluster the same loop runs per-host with
+jax.distributed.initialize() (see --distributed).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import signal
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import manager as ckpt
+from repro.configs.registry import get_config, smoke_config
+from repro.data.pipeline import Prefetcher, SyntheticLM, device_batch
+from repro.distributed.rules import make_plan
+from repro.launch.mesh import make_mesh
+from repro.models.zoo import get_model
+from repro.training.train_step import make_train_step
+from repro.utils.params import param_count
+
+
+class TrainLoop:
+    """Reusable loop object (examples and tests drive it directly)."""
+
+    def __init__(self, cfg, *, global_batch=8, seq=128, ckpt_dir=None,
+                 mesh=None, seed=0, grad_compression=False):
+        self.cfg = cfg
+        self.mesh = mesh
+        plan = None
+        if mesh is not None:
+            from repro.configs.base import ShapeCfg
+            plan = make_plan(cfg, mesh, ShapeCfg("custom", seq, global_batch, "train"))
+        self.plan = plan
+        self.model = get_model(cfg, plan)
+        self.step_fn, self.opt_init, _ = make_train_step(
+            self.model, cfg, plan, grad_compression=grad_compression)
+        self.jit_step = jax.jit(self.step_fn, donate_argnums=(0, 1))
+        self.data = SyntheticLM(cfg.vocab_size, seq, global_batch, seed=seed)
+        self.ckpt_dir = ckpt_dir
+        self.seq, self.gb = seq, global_batch
+        self._preempted = False
+
+    def init_state(self, seed=0):
+        params = self.model.init(jax.random.PRNGKey(seed))
+        return params, self.opt_init(params), 0
+
+    def restore_or_init(self, seed=0):
+        if self.ckpt_dir:
+            last = ckpt.latest_step(self.ckpt_dir)
+            if last is not None:
+                params, opt_state, _ = self.init_state(seed)
+                state = ckpt.restore(self.ckpt_dir, last,
+                                     {"params": params, "opt": opt_state})
+                return state["params"], state["opt"], last
+        return self.init_state(seed)
+
+    def request_preempt(self, *_):
+        self._preempted = True
+
+    def run(self, steps: int, *, save_every: int = 0, log=print):
+        params, opt_state, start = self.restore_or_init()
+        batch_axes = self.plan.batch_axes if self.plan else None
+        step_times = []
+        for step in range(start, steps):
+            t0 = time.monotonic()
+            hb = self.data.batch_at(step)
+            batch = device_batch(hb, self.mesh, batch_axes)
+            params, opt_state, metrics = self.jit_step(
+                params, opt_state, batch, jnp.int32(step))
+            loss = float(metrics["loss"])
+            dt = time.monotonic() - t0
+            step_times.append(dt)
+            med = float(np.median(step_times[-20:]))
+            straggler = dt > 3 * med and len(step_times) > 5
+            log(f"step {step + 1} loss {loss:.4f} {dt * 1e3:.0f}ms"
+                + (" [straggler]" if straggler else ""))
+            if self.ckpt_dir and save_every and (step + 1) % save_every == 0:
+                ckpt.save(self.ckpt_dir, step + 1,
+                          {"params": params, "opt": opt_state},
+                          extra={"data_step": step + 1})
+            if self._preempted:
+                if self.ckpt_dir:
+                    ckpt.save(self.ckpt_dir, step + 1,
+                              {"params": params, "opt": opt_state},
+                              extra={"preempted": True})
+                log(f"preempted at step {step + 1}; state saved")
+                return params, opt_state, step + 1
+        return params, opt_state, steps
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true", help="reduced config")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--save-every", type=int, default=0)
+    ap.add_argument("--mesh", default=None,
+                    help="e.g. '2,4' => (data=2, model=4) on forced devices")
+    ap.add_argument("--grad-compression", action="store_true")
+    ap.add_argument("--distributed", action="store_true",
+                    help="call jax.distributed.initialize() (multi-host)")
+    args = ap.parse_args()
+
+    if args.distributed:
+        jax.distributed.initialize()
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = smoke_config(cfg)
+    mesh = None
+    if args.mesh:
+        shape = tuple(int(x) for x in args.mesh.split(","))
+        mesh = make_mesh(shape, ("data", "model")[:len(shape)])
+
+    loop = TrainLoop(cfg, global_batch=args.global_batch, seq=args.seq,
+                     ckpt_dir=args.ckpt_dir, mesh=mesh,
+                     grad_compression=args.grad_compression)
+    signal.signal(signal.SIGTERM, loop.request_preempt)
+    n = param_count(loop.model.init(jax.random.PRNGKey(0)))
+    print(f"arch={cfg.name} params={n / 1e6:.1f}M "
+          f"batch={args.global_batch}x{args.seq}")
+    loop.run(args.steps, save_every=args.save_every)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,84 @@
+"""The "native compiler" baseline: manually-tuned heuristic placement rules
+(stand-in for the NNP-I compiler of §4), plus the Greedy-DP baseline agent.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.graphs.graph import WorkloadGraph
+from repro.memsim import tiers as T
+from repro.memsim.simulator import (SimGraph, build_sim_graph, evaluate,
+                                    evaluate_population, latency, rectify)
+
+
+def heuristic_mapping(g: WorkloadGraph) -> np.ndarray:
+    """Conservative size-threshold rules (production compilers reserve most
+    of the fast tiers for scratch and double-buffering, so only small
+    tensors are pinned — this caution is exactly the headroom a
+    per-workload learner can exploit, cf. §5.2.1 of the paper). The same
+    sequential allocator then resolves capacity, with the heuristic's
+    budget capped at half of each fast tier."""
+    n = g.n
+    m = np.zeros((n, 2), np.int32)
+    budget = {T.VMEM_IDX: T.TIERS[T.VMEM_IDX].capacity * 0.5,
+              T.CMEM_IDX: T.TIERS[T.CMEM_IDX].capacity * 0.5}
+    for i, nd in enumerate(g.nodes):
+        wb, ab = nd.weight_bytes, nd.ofm_bytes
+        for tensor, (bytes_, col) in enumerate([(wb, 0), (ab, 1)]):
+            tier = T.HBM_IDX
+            if bytes_ <= 64 * 2 ** 10 and budget[T.VMEM_IDX] >= bytes_:
+                tier = T.VMEM_IDX
+            elif bytes_ <= 1 * 2 ** 20 and budget[T.CMEM_IDX] >= bytes_:
+                tier = T.CMEM_IDX
+            if tier != T.HBM_IDX:
+                budget[tier] -= bytes_
+            m[i, col] = tier
+    return m
+
+
+def compiler_reference(g: WorkloadGraph):
+    """Returns (compiler mapping (rectified), its latency)."""
+    sg = build_sim_graph(g)
+    m = jnp.asarray(heuristic_mapping(g))
+    rect, eps = rectify(sg, m)
+    lat = latency(sg, rect)
+    return np.asarray(rect), float(lat)
+
+
+def greedy_dp(g: WorkloadGraph, passes: int = 3, budget: int = None,
+              log=None):
+    """Greedy-DP agent (§4 Baselines): layer-wise greedy sweeps assuming
+    conditional independence across nodes. 9 candidate (w, a) placements
+    per node, evaluated with the true simulator reward; several passes.
+
+    Returns (best mapping, history of (iteration, best_reward)).
+    """
+    sg = build_sim_graph(g)
+    _, ref_lat = compiler_reference(g)
+    ref_lat = jnp.float32(ref_lat)
+    n = g.n
+    combos = jnp.asarray([(w, a) for w in range(3) for a in range(3)],
+                         jnp.int32)  # (9, 2)
+    mapping = jnp.zeros((n, 2), jnp.int32)  # paper: init all-DRAM (HBM)
+    history = []
+    iters = 0
+    for p in range(passes):
+        for i in range(n):
+            cand = jnp.tile(mapping[None], (9, 1, 1)).at[:, i, :].set(combos)
+            res = evaluate_population(sg, cand, ref_lat)
+            best = int(jnp.argmax(res["reward"]))
+            mapping = cand[best]
+            iters += 9
+            if budget is not None and iters >= budget:
+                r = evaluate(sg, mapping, ref_lat)
+                history.append((iters, float(r["reward"])))
+                return np.asarray(mapping), history
+        r = evaluate(sg, mapping, ref_lat)
+        history.append((iters, float(r["reward"])))
+        if log:
+            log(f"greedy-dp pass {p + 1}: reward {float(r['reward']):.3f} "
+                f"speedup {float(r['speedup']):.3f}")
+    return np.asarray(mapping), history

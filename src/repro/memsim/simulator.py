@@ -1,0 +1,143 @@
+"""Latency + validity simulator for memory placements (jit/vmap-able).
+
+Faithful to Algorithm 1:
+- ``rectify``: the "compiler" walks the graph in topological order with
+  per-tier free-byte counters (weights pinned forever; activations freed
+  after their last consumer) and spills any infeasible placement to HBM.
+  The re-assigned-bytes ratio is the paper's mapping error eps.
+- ``latency``: roofline per node — max(compute, weight fetch + act in/out)
+  + fixed overhead — summed over the (sequential, batch-1) schedule.
+- ``evaluate``: eps > 0  ->  reward = -eps (no "inference" is run);
+  eps == 0 ->  reward = speedup vs the reference (compiler) latency.
+
+Everything is pure jnp over static per-graph arrays, so a whole EA
+population's mappings evaluate in ONE vmapped call — the JAX-native
+replacement for the paper's serial hardware-in-the-loop rollouts.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict, NamedTuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.graphs.graph import WorkloadGraph
+from repro.memsim import tiers as T
+
+
+class SimGraph(NamedTuple):
+    """Static (device-resident) arrays derived from a WorkloadGraph."""
+    weight_bytes: jnp.ndarray      # (N,)
+    weight_frac: jnp.ndarray       # (N,) fraction streamed per inference
+    act_bytes: jnp.ndarray         # (N,)
+    flops: jnp.ndarray             # (N,)
+    last_consumer: jnp.ndarray     # (N,) int32
+    in_acts: jnp.ndarray           # (N, max_in) int32 producer idx, -1 pad
+    release: jnp.ndarray           # (N, N) bool: release[t, n] = last[n]==t
+
+
+def build_sim_graph(g: WorkloadGraph) -> SimGraph:
+    arr = g.arrays()
+    n = g.n
+    max_in = max(1, max(len(p) for p in arr["producers_of"]))
+    in_acts = -np.ones((n, max_in), np.int32)
+    for i, ps in enumerate(arr["producers_of"]):
+        for j, p in enumerate(ps):
+            in_acts[i, j] = p
+    last = arr["last_consumer"].astype(np.int32)
+    release = np.zeros((n, n), bool)
+    release[last, np.arange(n)] = True
+    return SimGraph(
+        jnp.asarray(arr["weight_bytes"], jnp.float32),
+        jnp.asarray(arr["weight_frac"], jnp.float32),
+        jnp.asarray(arr["act_bytes"], jnp.float32),
+        jnp.asarray(arr["flops"], jnp.float32),
+        jnp.asarray(last),
+        jnp.asarray(in_acts),
+        jnp.asarray(release),
+    )
+
+
+CAP = jnp.asarray(T.CAPACITIES, jnp.float32)
+BW = jnp.asarray(T.BANDWIDTHS, jnp.float32)
+
+
+def rectify(sg: SimGraph, mapping: jnp.ndarray):
+    """mapping (N, 2) int32 in [0,3): [:,0]=weight tier, [:,1]=act tier.
+
+    Returns (rectified mapping, eps) — the compiler pass of Algorithm 1.
+    Sequential topo-order allocation with capacity counters (lax.scan).
+    """
+    n = sg.weight_bytes.shape[0]
+
+    def step(carry, t):
+        free, out_map, moved = carry
+        wt, at = mapping[t, 0], mapping[t, 1]
+        wb, ab = sg.weight_bytes[t], sg.act_bytes[t]
+        # --- weights: pinned for the whole run
+        w_fits = free[wt] >= wb
+        w_tier = jnp.where(w_fits, wt, T.HBM_IDX)
+        moved = moved + jnp.where(w_fits, 0.0, wb)
+        free = free.at[w_tier].add(-wb)
+        # --- output activation: lives until last consumer
+        a_fits = free[at] >= ab
+        a_tier = jnp.where(a_fits, at, T.HBM_IDX)
+        moved = moved + jnp.where(a_fits, 0.0, ab)
+        free = free.at[a_tier].add(-ab)
+        out_map = out_map.at[t, 0].set(w_tier)
+        out_map = out_map.at[t, 1].set(a_tier)
+        # --- release activations whose last consumer is t
+        rel = sg.release[t]  # (N,) bool
+        per_tier = jnp.stack([
+            jnp.sum(sg.act_bytes * rel * (out_map[:, 1] == k))
+            for k in range(T.N_TIERS)])
+        free = free + per_tier
+        return (free, out_map, moved), None
+
+    free0 = CAP  # HBM treated as its real capacity too
+    map0 = jnp.zeros((n, 2), jnp.int32)
+    (free, out_map, moved), _ = jax.lax.scan(
+        step, (free0, map0, jnp.float32(0.0)), jnp.arange(n))
+    total = jnp.sum(sg.weight_bytes) + jnp.sum(sg.act_bytes)
+    eps = moved / jnp.maximum(total, 1.0)
+    return out_map, eps
+
+
+def latency(sg: SimGraph, mapping: jnp.ndarray) -> jnp.ndarray:
+    """Roofline latency of a (valid) mapping. mapping (N,2) int32."""
+    w_bw = BW[mapping[:, 0]]
+    out_bw = BW[mapping[:, 1]]
+    w_t = sg.weight_bytes * sg.weight_frac / w_bw
+    out_t = sg.act_bytes / out_bw
+    # inputs stream from wherever the producer placed them
+    in_tier = jnp.where(sg.in_acts >= 0,
+                        mapping[jnp.clip(sg.in_acts, 0), 1], 0)
+    in_bytes = jnp.where(sg.in_acts >= 0,
+                         sg.act_bytes[jnp.clip(sg.in_acts, 0)], 0.0)
+    in_t = jnp.sum(in_bytes / BW[in_tier], axis=1)
+    mem_t = w_t + out_t + in_t
+    comp_t = sg.flops / (T.PEAK_FLOPS * T.OP_UTILIZATION_DEFAULT)
+    return jnp.sum(jnp.maximum(mem_t, comp_t) + T.FIXED_OVERHEAD_S)
+
+
+@partial(jax.jit, static_argnames=("reward_scale",))
+def evaluate(sg: SimGraph, mapping: jnp.ndarray, ref_latency: jnp.ndarray,
+             reward_scale: float = 5.0):
+    """Algorithm 1 reward. Returns dict(reward, eps, latency, speedup)."""
+    rect, eps = rectify(sg, mapping)
+    lat = latency(sg, rect)
+    valid = eps <= 0.0
+    speedup = ref_latency / lat
+    reward = jnp.where(valid, reward_scale * speedup, -eps)
+    return {"reward": reward, "eps": eps, "latency": lat,
+            "speedup": jnp.where(valid, speedup, 0.0), "valid": valid,
+            "rectified": rect}
+
+
+def evaluate_population(sg: SimGraph, mappings: jnp.ndarray, ref_latency,
+                        reward_scale: float = 5.0):
+    """mappings (P, N, 2) -> dict of (P,) arrays. One vmapped device call."""
+    return jax.vmap(lambda m: evaluate(sg, m, ref_latency, reward_scale))(mappings)

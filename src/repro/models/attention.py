@@ -1,0 +1,219 @@
+"""GQA attention: blocked (flash-style online-softmax) train/prefill path,
+single-step decode path, optional qk-norm / qkv-bias, RoPE.
+
+Sharding: the caller constrains activations; this module is written so the
+same code path works head-parallel (heads on "model") or sequence-parallel
+(q sharded on S, KV gathered), per repro.distributed.rules.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import rms_norm, rope
+from repro.utils.params import ParamDef
+
+
+def attn_defs(cfg: ModelConfig):
+    D, H, K, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    d = {
+        "wq": ParamDef((D, H, hd), ("embed", "heads", "head_dim"), "scaled", fan_in_axes=(0,)),
+        "wk": ParamDef((D, K, hd), ("embed", "kv_heads", "head_dim"), "scaled", fan_in_axes=(0,)),
+        "wv": ParamDef((D, K, hd), ("embed", "kv_heads", "head_dim"), "scaled", fan_in_axes=(0,)),
+        "wo": ParamDef((H, hd, D), ("heads", "head_dim", "embed"), "scaled", fan_in_axes=(0, 1)),
+    }
+    if cfg.qkv_bias:
+        d["bq"] = ParamDef((H, hd), ("heads", "head_dim"), "zeros")
+        d["bk"] = ParamDef((K, hd), ("kv_heads", "head_dim"), "zeros")
+        d["bv"] = ParamDef((K, hd), ("kv_heads", "head_dim"), "zeros")
+    if cfg.qk_norm:
+        d["q_norm"] = ParamDef((hd,), (None,), "ones")
+        d["k_norm"] = ParamDef((hd,), (None,), "ones")
+    return d
+
+
+def project_qkv(p, x, cfg: ModelConfig, positions):
+    """x: (B,S,D) -> q (B,S,K,G,h), k/v (B,S,K,h); rope + qk-norm applied."""
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(dt))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(dt)
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    B, S = x.shape[:2]
+    K, G = cfg.n_kv_heads, cfg.q_per_kv
+    q = q.reshape(B, S, K, G, cfg.head_dim)
+    return q, k, v
+
+
+def _flash_fwd_impl(chunk, causal, q, k, v, q_positions):
+    """Online-softmax forward. q (B,Sq,K,G,h); k,v (B,Sk,K,h).
+    Returns (out (B,K,G,Sq,h) f32, lse (B,K,G,Sq) f32)."""
+    B, Sq, K, G, h = q.shape
+    Sk = k.shape[1]
+    n = Sk // chunk
+    scale = h ** -0.5
+    qf = (q * jnp.asarray(scale, q.dtype))   # stay in compute dtype
+
+    ks = jnp.moveaxis(k.reshape(B, n, chunk, K, h), 1, 0)
+    vs = jnp.moveaxis(v.reshape(B, n, chunk, K, h), 1, 0)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        kc, vc, idx = xs
+        # bf16 x bf16 -> f32 accumulation (MXU-native, no hoistable convert)
+        s = jnp.einsum("bqkgh,bckh->bkgqc", qf, kc,
+                       preferred_element_type=jnp.float32)
+        if causal:
+            kv_pos = idx * chunk + jnp.arange(chunk)
+            mask = q_positions[:, None] >= kv_pos[None, :]  # (Sq, chunk)
+            s = jnp.where(mask[None, None, None], s, -1e30)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        pe = jnp.exp(s - m_new[..., None])
+        l_new = l * alpha + pe.sum(axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bkgqc,bckh->bkgqh", pe.astype(qf.dtype), vc,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, K, G, Sq), -1e30, jnp.float32)
+    l0 = jnp.zeros((B, K, G, Sq), jnp.float32)
+    a0 = jnp.zeros((B, K, G, Sq, h), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (ks, vs, jnp.arange(n)))
+    l = jnp.maximum(l, 1e-30)
+    out = acc / l[..., None]
+    lse = m + jnp.log(l)
+    return out, lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _flash(chunk, causal, q, k, v, q_positions):
+    out, _ = _flash_fwd_impl(chunk, causal, q, k, v, q_positions)
+    return jnp.moveaxis(out, 3, 1).astype(q.dtype)  # (B,Sq,K,G,h)
+
+
+def _flash_fwd(chunk, causal, q, k, v, q_positions):
+    out, lse = _flash_fwd_impl(chunk, causal, q, k, v, q_positions)
+    res = (q, k, v, q_positions, out.astype(q.dtype), lse)
+    return jnp.moveaxis(out, 3, 1).astype(q.dtype), res
+
+
+def _flash_bwd(chunk, causal, res, g):
+    """Flash backward: recompute per-chunk probabilities (no O(S^2) saves)."""
+    q, k, v, q_positions, out, lse = res
+    B, Sq, K, G, h = q.shape
+    Sk = k.shape[1]
+    n = Sk // chunk
+    scale = h ** -0.5
+    qf = q * jnp.asarray(scale, q.dtype)                 # (B,Sq,K,G,h)
+    do = jnp.moveaxis(g, 1, 3)                           # (B,K,G,Sq,h)
+    D = jnp.einsum("bkgqh,bkgqh->bkgq", do, out,         # out is (B,K,G,Sq,h)
+                   preferred_element_type=jnp.float32)
+
+    ks = jnp.moveaxis(k.reshape(B, n, chunk, K, h), 1, 0)
+    vs = jnp.moveaxis(v.reshape(B, n, chunk, K, h), 1, 0)
+
+    def body(dq, xs):
+        kc, vc, idx = xs
+        s = jnp.einsum("bqkgh,bckh->bkgqc", qf, kc,
+                       preferred_element_type=jnp.float32)
+        if causal:
+            kv_pos = idx * chunk + jnp.arange(chunk)
+            mask = (q_positions[:, None] >= kv_pos[None, :])[None, None, None]
+            s = jnp.where(mask, s, -1e30)
+        p = jnp.exp(s - lse[..., None])                  # (B,K,G,Sq,c) f32
+        if causal:
+            p = jnp.where(mask, p, 0.0)
+        pl = p.astype(q.dtype)
+        dv_c = jnp.einsum("bkgqc,bkgqh->bckh", pl, do,
+                          preferred_element_type=jnp.float32)
+        dp = jnp.einsum("bkgqh,bckh->bkgqc", do, vc,
+                        preferred_element_type=jnp.float32)
+        ds = (p * (dp - D[..., None])).astype(q.dtype)
+        dq = dq + jnp.einsum("bkgqc,bckh->bqkgh", ds, kc,
+                             preferred_element_type=jnp.float32)
+        dk_c = jnp.einsum("bkgqc,bqkgh->bckh", ds, qf,
+                          preferred_element_type=jnp.float32)
+        return dq, (dk_c, dv_c)
+
+    dq0 = jnp.zeros((B, Sq, K, G, h), jnp.float32)
+    dq, (dks, dvs) = jax.lax.scan(body, dq0, (ks, vs, jnp.arange(n)))
+    dk = jnp.moveaxis(dks, 0, 1).reshape(B, Sk, K, h)
+    dv = jnp.moveaxis(dvs, 0, 1).reshape(B, Sk, K, h)
+    import numpy as _np
+    dpos = _np.zeros(q_positions.shape, dtype=jax.dtypes.float0)
+    return ((dq * scale).astype(q.dtype), dk.astype(k.dtype),
+            dv.astype(v.dtype), dpos)
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def blocked_attention(q, k, v, *, chunk: int, causal: bool,
+                      q_positions=None, kv_offset: int = 0):
+    """Flash attention (pure-XLA, custom VJP so backward memory is O(S*c)).
+
+    q: (B,Sq,K,G,h); k,v: (B,Sk,K,h). Returns (B,Sq,K,G,h).
+    The Pallas TPU kernel in repro.kernels.flash_attention implements the
+    same contract; this is the lowering used on non-TPU backends and by the
+    dry-run.
+    """
+    B, Sq, K, G, h = q.shape
+    Sk = k.shape[1]
+    chunk = min(chunk, Sk)
+    assert Sk % chunk == 0, (Sk, chunk)
+    if q_positions is None:
+        q_positions = jnp.arange(Sq) + kv_offset
+    return _flash(chunk, causal, q, k, v, q_positions)
+
+
+def decode_attention(q, k_cache, v_cache, pos):
+    """Single-token attention over a (possibly S-sharded) cache.
+
+    q: (B,1,K,G,h); caches: (B,Smax,K,h); pos: scalar current position.
+    Positions > pos are masked. Softmax over the (sharded) S dim lowers to a
+    partial reduce + small all-reduce under GSPMD.
+    """
+    B, _, K, G, h = q.shape
+    Smax = k_cache.shape[1]
+    scale = h ** -0.5
+    s = jnp.einsum("bokgh,bskh->bkgs", (q * scale).astype(jnp.float32),
+                   k_cache.astype(jnp.float32))
+    valid = jnp.arange(Smax)[None, None, None, :] <= pos
+    s = jnp.where(valid, s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskh->bkgh", w, v_cache.astype(jnp.float32))
+    return out.reshape(B, 1, K, G, h).astype(q.dtype)
+
+
+def attn_out(p, ctx, cfg: ModelConfig):
+    """ctx: (B,S,K,G,h) -> (B,S,D)."""
+    B, S = ctx.shape[:2]
+    ctx = ctx.reshape(B, S, cfg.n_heads, cfg.head_dim)
+    return jnp.einsum("bshk,hkd->bsd", ctx, p["wo"].astype(ctx.dtype))
+
+
+def update_cache(cache, new, pos, mode: str = "dus"):
+    """Write new (B,1,K,h) into cache (B,S,K,h) at sequence index pos.
+
+    "dus": dynamic_update_slice (preferred; GSPMD predicates the owning
+    shard). "onehot": masked full-cache write (always partitionable,
+    doubles HBM traffic — kept as a measured fallback, see §Perf).
+    """
+    if mode == "dus":
+        return jax.lax.dynamic_update_slice_in_dim(
+            cache, new.astype(cache.dtype), pos, axis=1)
+    sel = (jnp.arange(cache.shape[1]) == pos)[None, :, None, None]
+    return jnp.where(sel, new.astype(cache.dtype), cache)

@@ -1,0 +1,188 @@
+"""Shared model pieces: norms, rope, embeddings, chunked losses, MLP."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.utils.params import ParamDef
+
+
+import functools
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def rms_norm(x, scale, eps: float):
+    # NB: deliberately no full-tensor f32 upcast anywhere in fwd OR bwd —
+    # XLA hoists full-tensor converts out of the layer-scan loop into the
+    # stacked residual buffer, doubling activation memory (measured:
+    # +7 GiB/device on qwen3-0.6b train_4k; see EXPERIMENTS §Perf).
+    # f32 accumulation happens inside bf16 x bf16 -> f32 dots (MXU-native);
+    # the hand-written VJP below keeps the cotangent path bf16-clean too.
+    return _rms_fwd(x, scale, eps)[0]
+
+
+def _rms_inv(x, eps):
+    var = jnp.einsum("...d,...d->...", x, x,
+                     preferred_element_type=jnp.float32) / x.shape[-1]
+    return jax.lax.rsqrt(var + eps)[..., None]  # (..., 1) f32
+
+
+def _rms_fwd(x, scale, eps):
+    inv = _rms_inv(x, eps)
+    y = x * inv.astype(x.dtype) * scale.astype(x.dtype)
+    return y, (x, scale)
+
+
+def _rms_bwd(eps, res, g):
+    x, scale = res
+    inv = _rms_inv(x, eps)                       # recompute: (..., 1) f32
+    sb = scale.astype(x.dtype)
+    gs = g * sb                                  # bf16
+    # t = sum_d gs_d * x_d  (f32 via dot, per row)
+    t = jnp.einsum("...d,...d->...", gs, x,
+                   preferred_element_type=jnp.float32)[..., None]
+    coeff = (inv ** 3) * (t / x.shape[-1])       # (...,1) f32
+    dx = gs * inv.astype(x.dtype) - x * coeff.astype(x.dtype)
+    # dscale_d = sum_rows g_d * x_d * inv  (f32 accumulation)
+    xin = x * inv.astype(x.dtype)
+    red = tuple(range(g.ndim - 1))
+    dscale = jnp.einsum(g, red + (g.ndim - 1,), xin, red + (g.ndim - 1,),
+                        (g.ndim - 1,), preferred_element_type=jnp.float32)
+    return dx, dscale.astype(scale.dtype)
+
+
+rms_norm.defvjp(_rms_fwd, _rms_bwd)
+
+
+def rope(x, positions, theta: float):
+    """x: (..., S, H, d) with d even; positions broadcastable to (..., S)."""
+    d = x.shape[-1]
+    freq = theta ** (-jnp.arange(0, d, 2, dtype=jnp.float32) / d)
+    ang = positions.astype(jnp.float32)[..., None, None] * freq  # (...,S,1,d/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _gdb(dtype_name: str, x):
+    return x
+
+
+def _gdb_fwd(dtype_name, x):
+    return x, None
+
+
+def _gdb_bwd(dtype_name, _, g):
+    return (g.astype(dtype_name),)
+
+
+_gdb.defvjp(_gdb_fwd, _gdb_bwd)
+
+
+def grad_dtype_barrier(x):
+    """Identity that forces the cotangent back to x's dtype.
+
+    Placed between the layer stack and the loss: without it the f32
+    cotangent produced by the (f32-accumulated) cross-entropy propagates
+    into the layer-scan backward and XLA materializes an f32 *copy* of the
+    entire stacked bf16 residual buffer (+7 GiB/device measured on
+    qwen3-0.6b train_4k). See EXPERIMENTS.md §Perf.
+    """
+    return _gdb(jnp.dtype(x.dtype).name, x)
+
+
+# ------------------------------------------------------------------ embedding
+def embed_defs(cfg: ModelConfig):
+    d = {"table": ParamDef((cfg.vocab_padded, cfg.d_model), ("vocab", "embed"), "normal")}
+    if not cfg.tie_embeddings:
+        d["unembed"] = ParamDef((cfg.d_model, cfg.vocab_padded), ("embed", "vocab"), "scaled")
+    return d
+
+
+def embed(p, tokens, cfg: ModelConfig):
+    out = jnp.take(p["table"], tokens, axis=0)
+    return out.astype(cfg.act_dtype)
+
+
+def unembed_matrix(p, cfg: ModelConfig):
+    if cfg.tie_embeddings:
+        return p["table"].T
+    return p["unembed"]
+
+
+def chunked_xent(p, h, targets, cfg: ModelConfig, mask=None):
+    """Next-token CE computed in sequence chunks so (B,S,V) never materializes.
+
+    h: (B, S, D) final hidden states; targets: (B, S) int32.
+    Returns (mean loss over unmasked tokens, token count).
+    """
+    w = unembed_matrix(p, cfg)  # (D, Vp)
+    B, S, D = h.shape
+    c = min(cfg.logit_chunk, S)
+    n = S // c
+    assert S % c == 0, (S, c)
+    hs = jnp.moveaxis(h.reshape(B, n, c, D), 1, 0)
+    ts = jnp.moveaxis(targets.reshape(B, n, c), 1, 0)
+    ms = None if mask is None else jnp.moveaxis(mask.reshape(B, n, c), 1, 0)
+
+    @jax.checkpoint  # recompute per-chunk logits in backward (saves ~2.5GiB)
+    def chunk_nll(hc, tc, mc):
+        # bf16 x bf16 -> f32 dot: f32 logits without a hoistable convert
+        logits = jnp.einsum("bcd,dv->bcv", hc, w.astype(hc.dtype),
+                            preferred_element_type=jnp.float32)
+        # mask padded vocab entries
+        if cfg.vocab_padded != cfg.vocab_size:
+            pad = jnp.arange(cfg.vocab_padded) >= cfg.vocab_size
+            logits = jnp.where(pad[None, None, :], -1e30, logits)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, tc[..., None], axis=-1)[..., 0]
+        nll = (lse - gold) * mc
+        return nll.sum(), mc.sum()
+
+    def body(carry, xs):
+        tot, cnt = carry
+        if ms is None:
+            hc, tc = xs
+            mc = jnp.ones(tc.shape, jnp.float32)
+        else:
+            hc, tc, mc = xs
+        s, c_ = chunk_nll(hc, tc, mc)
+        return (tot + s, cnt + c_), None
+
+    xs = (hs, ts) if ms is None else (hs, ts, ms)
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.float32(0.0), jnp.float32(0.0)), xs)
+    return tot / jnp.maximum(cnt, 1.0), cnt
+
+
+def logits_last(p, h_last, cfg: ModelConfig):
+    """h_last: (B, D) -> (B, Vp) logits with padded vocab masked."""
+    w = unembed_matrix(p, cfg)
+    logits = h_last.astype(jnp.float32) @ w.astype(jnp.float32)
+    if cfg.vocab_padded != cfg.vocab_size:
+        pad = jnp.arange(cfg.vocab_padded) >= cfg.vocab_size
+        logits = jnp.where(pad[None, :], -1e30, logits)
+    return logits
+
+
+# ----------------------------------------------------------------------- MLP
+def mlp_defs(cfg: ModelConfig, d_ff: int = 0):
+    f = d_ff or cfg.d_ff
+    D = cfg.d_model
+    return {
+        "w_gate": ParamDef((D, f), ("embed", "mlp"), "scaled"),
+        "w_up": ParamDef((D, f), ("embed", "mlp"), "scaled"),
+        "w_down": ParamDef((f, D), ("mlp", "embed"), "scaled"),
+    }
+
+
+def mlp(p, x):
+    h = jax.nn.silu(x @ p["w_gate"].astype(x.dtype)) * (x @ p["w_up"].astype(x.dtype))
+    return h @ p["w_down"].astype(x.dtype)
+
+
+def norm_defs(cfg: ModelConfig):
+    return {"scale": ParamDef((cfg.d_model,), (None,), "ones")}

@@ -1,0 +1,203 @@
+"""Encoder-decoder transformer (seamless-m4t backbone).
+
+The speech/audio frontend is a STUB per the assignment: the encoder input is
+a precomputed frame-embedding tensor (B, Se, D). Decoder = causal self-attn
++ cross-attn over encoder memory + SwiGLU MLP. RoPE on self-attention only.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.distributed.rules import ShardingPlan, wsc
+from repro.models import attention as att
+from repro.models import common as cm
+from repro.models.transformer import TransformerLM, _remat, _stack_defs
+from repro.utils.params import init_params, make_specs
+
+
+class EncDecLM:
+    def __init__(self, cfg: ModelConfig, plan: Optional[ShardingPlan] = None):
+        assert cfg.enc_layers and cfg.dec_layers
+        self.cfg, self.plan = cfg, plan
+        self._tf = TransformerLM(cfg, plan)
+
+    def _enc_layer_defs(self):
+        cfg = self.cfg
+        return {"ln1": cm.norm_defs(cfg), "attn": att.attn_defs(cfg),
+                "ln2": cm.norm_defs(cfg), "mlp": cm.mlp_defs(cfg)}
+
+    def _dec_layer_defs(self):
+        cfg = self.cfg
+        return {"ln1": cm.norm_defs(cfg), "attn": att.attn_defs(cfg),
+                "lnx": cm.norm_defs(cfg), "xattn": att.attn_defs(cfg),
+                "ln2": cm.norm_defs(cfg), "mlp": cm.mlp_defs(cfg)}
+
+    def _param_defs_raw(self):
+        cfg = self.cfg
+        return {
+            "embed": cm.embed_defs(cfg),
+            "enc": _stack_defs(self._enc_layer_defs(), cfg.enc_layers),
+            "dec": _stack_defs(self._dec_layer_defs(), cfg.dec_layers),
+            "enc_norm": cm.norm_defs(cfg),
+            "final_norm": cm.norm_defs(cfg),
+        }
+
+    def param_defs(self):
+        from repro.utils.params import with_dtype
+        return with_dtype(self._param_defs_raw(), self.cfg.param_dtype)
+
+    def init(self, key):
+        return init_params(self.param_defs(), key)
+
+    def param_specs(self):
+        return make_specs(self.param_defs(), self.plan.rules)
+
+    def _wsc_act(self, x):
+        return wsc(x, self.plan.act_spec() if self.plan else None, self.plan)
+
+    # ----------------------------------------------------------- encoder
+    def encode(self, params, enc_emb):
+        """enc_emb (B,Se,D) precomputed frame embeddings (frontend stub)."""
+        cfg = self.cfg
+        x = self._wsc_act(enc_emb.astype(cfg.act_dtype))
+        positions = jnp.arange(x.shape[1])
+
+        def enc_layer(p, h):
+            hh = cm.rms_norm(h, p["ln1"]["scale"], cfg.norm_eps)
+            q, k, v = att.project_qkv(p["attn"], hh, cfg, positions)
+            q, k, v = self._tf._constrain_qkv(q, k, v)
+            ctx = att.blocked_attention(q, k, v, chunk=cfg.attn_chunk,
+                                        causal=False, q_positions=positions)
+            ctx = ctx.reshape(h.shape[0], h.shape[1], cfg.n_heads, cfg.head_dim)
+            o = jnp.einsum("bshk,hkd->bsd", ctx, p["attn"]["wo"].astype(ctx.dtype))
+            h = self._wsc_act(h + o)
+            hh = cm.rms_norm(h, p["ln2"]["scale"], cfg.norm_eps)
+            return self._wsc_act(h + cm.mlp(p["mlp"], hh))
+
+        body = _remat(enc_layer, cfg)
+        x, _ = jax.lax.scan(lambda h, p: (body(p, h), None), x, params["enc"])
+        return cm.rms_norm(x, params["enc_norm"]["scale"], cfg.norm_eps)
+
+    # ----------------------------------------------------- cross-attention
+    def _cross_kv(self, p_x, enc_out):
+        dt = enc_out.dtype
+        k = jnp.einsum("bsd,dhk->bshk", enc_out, p_x["wk"].astype(dt))
+        v = jnp.einsum("bsd,dhk->bshk", enc_out, p_x["wv"].astype(dt))
+        return k, v
+
+    def _cross_attend(self, p_x, h, k, v):
+        cfg = self.cfg
+        dt = h.dtype
+        B, St = h.shape[:2]
+        q = jnp.einsum("bsd,dhk->bshk", h, p_x["wq"].astype(dt))
+        q = q.reshape(B, St, cfg.n_kv_heads, cfg.q_per_kv, cfg.head_dim)
+        q, k, v = self._tf._constrain_qkv(q, k, v)
+        ctx = att.blocked_attention(q, k, v, chunk=cfg.attn_chunk, causal=False)
+        ctx = ctx.reshape(B, St, cfg.n_heads, cfg.head_dim)
+        return jnp.einsum("bshk,hkd->bsd", ctx, p_x["wo"].astype(dt))
+
+    # ------------------------------------------------------------- train
+    def _dec_layer(self, p, h, enc_out, positions):
+        cfg = self.cfg
+        hh = cm.rms_norm(h, p["ln1"]["scale"], cfg.norm_eps)
+        q, k, v = att.project_qkv(p["attn"], hh, cfg, positions)
+        q, k, v = self._tf._constrain_qkv(q, k, v)
+        ctx = att.blocked_attention(q, k, v, chunk=cfg.attn_chunk,
+                                    causal=True, q_positions=positions)
+        ctx = ctx.reshape(h.shape[0], h.shape[1], cfg.n_heads, cfg.head_dim)
+        o = jnp.einsum("bshk,hkd->bsd", ctx, p["attn"]["wo"].astype(ctx.dtype))
+        h = self._wsc_act(h + o)
+        hh = cm.rms_norm(h, p["lnx"]["scale"], cfg.norm_eps)
+        xk, xv = self._cross_kv(p["xattn"], enc_out)
+        h = self._wsc_act(h + self._cross_attend(p["xattn"], hh, xk, xv))
+        hh = cm.rms_norm(h, p["ln2"]["scale"], cfg.norm_eps)
+        return self._wsc_act(h + cm.mlp(p["mlp"], hh))
+
+    def forward(self, params, batch):
+        cfg = self.cfg
+        enc_out = self.encode(params, batch["enc_emb"])
+        tokens = batch["tokens"]
+        x = self._wsc_act(cm.embed(params["embed"], tokens, cfg))
+        positions = jnp.arange(tokens.shape[1])
+        body = _remat(lambda p, h: self._dec_layer(p, h, enc_out, positions), cfg)
+        x, _ = jax.lax.scan(lambda h, p: (body(p, h), None), x, params["dec"])
+        x = cm.grad_dtype_barrier(x)
+        return cm.rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps), jnp.float32(0.0)
+
+    def loss(self, params, batch):
+        h, aux = self.forward(params, batch)
+        ce, cnt = cm.chunked_xent(params["embed"], h, batch["labels"], self.cfg,
+                                  mask=batch.get("mask"))
+        return ce + aux, {"ce": ce, "aux": aux, "tokens": cnt}
+
+    # ----------------------------------------------------------- serving
+    def cache_struct(self, batch: int, max_len: int, enc_len: Optional[int] = None):
+        cfg = self.cfg
+        enc_len = enc_len or max_len
+        sh_self = (cfg.dec_layers, batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+        sh_cross = (cfg.dec_layers, batch, enc_len, cfg.n_kv_heads, cfg.head_dim)
+        f = lambda sh: jax.ShapeDtypeStruct(sh, cfg.act_dtype)
+        return {"k": f(sh_self), "v": f(sh_self),
+                "xk": f(sh_cross), "xv": f(sh_cross)}
+
+    def init_cache(self, batch: int, max_len: int, enc_len: Optional[int] = None):
+        return jax.tree.map(lambda t: jnp.zeros(t.shape, t.dtype),
+                            self.cache_struct(batch, max_len, enc_len))
+
+    def decode_step(self, params, cache, token, pos):
+        cfg, plan = self.cfg, self.plan
+        x = cm.embed(params["embed"], token[:, None], cfg)
+
+        def scan_body(h, xs):
+            p, kc, vc, xk, xv = xs
+            hh = cm.rms_norm(h, p["ln1"]["scale"], cfg.norm_eps)
+            q, k, v = att.project_qkv(p["attn"], hh, cfg, jnp.full((1,), pos))
+            kc = att.update_cache(kc, k, pos, cfg.cache_update)
+            vc = att.update_cache(vc, v, pos, cfg.cache_update)
+            if plan is not None:
+                cs = P(plan.cache_batch, plan.cache_seq, plan.cache_kv, None)
+                kc, vc = wsc(kc, cs, plan), wsc(vc, cs, plan)
+            ctx = att.decode_attention(q, kc, vc, pos)
+            B = h.shape[0]
+            ctx = ctx.reshape(B, 1, cfg.n_heads, cfg.head_dim)
+            o = jnp.einsum("bshk,hkd->bsd", ctx, p["attn"]["wo"].astype(ctx.dtype))
+            h = h + o
+            # cross attention over full encoder memory
+            hh = cm.rms_norm(h, p["lnx"]["scale"], cfg.norm_eps)
+            dt = h.dtype
+            qx = jnp.einsum("bsd,dhk->bshk", hh, p["xattn"]["wq"].astype(dt))
+            qx = qx.reshape(B, 1, cfg.n_kv_heads, cfg.q_per_kv, cfg.head_dim)
+            cx = att.decode_attention(qx, xk, xv, xk.shape[1] - 1)
+            cx = cx.reshape(B, 1, cfg.n_heads, cfg.head_dim)
+            h = h + jnp.einsum("bshk,hkd->bsd", cx, p["xattn"]["wo"].astype(dt))
+            hh = cm.rms_norm(h, p["ln2"]["scale"], cfg.norm_eps)
+            h = h + cm.mlp(p["mlp"], hh)
+            return h, (kc, vc)
+
+        xs = (params["dec"], cache["k"], cache["v"], cache["xk"], cache["xv"])
+        x, (nk, nv) = jax.lax.scan(scan_body, x, xs)
+        x = cm.rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
+        logits = cm.logits_last(params["embed"], x[:, 0], cfg)
+        return logits, {"k": nk, "v": nv, "xk": cache["xk"], "xv": cache["xv"]}
+
+    def prefill(self, params, enc_emb, max_len: int):
+        """Encode + precompute cross-kv + BOS logits."""
+        cfg = self.cfg
+        enc_out = self.encode(params, enc_emb)
+        B = enc_out.shape[0]
+
+        def per_layer(h, p):
+            xk, xv = self._cross_kv(p["xattn"], enc_out)
+            return h, (xk, xv)
+
+        _, (xks, xvs) = jax.lax.scan(per_layer, jnp.float32(0.0), params["dec"])
+        cache = self.init_cache(B, max_len, enc_out.shape[1])
+        cache["xk"], cache["xv"] = xks, xvs
+        bos = jnp.zeros((B,), jnp.int32)
+        logits, cache = self.decode_step(params, cache, bos, jnp.int32(0))
+        return cache, logits

@@ -1,0 +1,289 @@
+"""Mamba2 (SSD — state-space duality) LM, TPU-adapted.
+
+The SSD forward is the chunked matmul form (arXiv:2405.21060 §6): quadratic
+attention-like einsums *within* chunks (MXU-friendly) + a sequential scan
+over chunk states. Decode is the O(1) recurrent step on (H, N, hd) states.
+n_groups = 1 (B/C shared across heads), as in the published 780m config.
+
+TPU adaptation: the reference CUDA implementation fuses z/x/B/C/dt into one
+in_proj and one conv; we keep them as separate parameter tensors so tensor
+parallelism shards x/z on the inner dim and dt on heads *without* misaligned
+slices of sharded dimensions (see DESIGN.md §7). Mathematically identical.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.distributed.rules import ShardingPlan, wsc
+from repro.models import common as cm
+from repro.utils.params import ParamDef, init_params, make_specs
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_in = cfg.d_model * s.expand
+    H = d_in // s.head_dim
+    return d_in, H
+
+
+def mamba_defs(cfg: ModelConfig):
+    s = cfg.ssm
+    D = cfg.d_model
+    d_in, H = _dims(cfg)
+    N = s.d_state
+    W = s.conv_width
+    return {
+        "w_z": ParamDef((D, d_in), ("embed", "ssm_inner"), "scaled"),
+        "w_x": ParamDef((D, d_in), ("embed", "ssm_inner"), "scaled"),
+        "w_B": ParamDef((D, N), ("embed", "ssm_state"), "scaled"),
+        "w_C": ParamDef((D, N), ("embed", "ssm_state"), "scaled"),
+        "w_dt": ParamDef((D, H), ("embed", "ssm_head"), "scaled"),
+        "conv_x": ParamDef((W, d_in), (None, "ssm_inner"), "scaled"),
+        "conv_bx": ParamDef((d_in,), ("ssm_inner",), "zeros"),
+        "conv_B": ParamDef((W, N), (None, "ssm_state"), "scaled"),
+        "conv_bB": ParamDef((N,), ("ssm_state",), "zeros"),
+        "conv_C": ParamDef((W, N), (None, "ssm_state"), "scaled"),
+        "conv_bC": ParamDef((N,), ("ssm_state",), "zeros"),
+        "A_log": ParamDef((H,), ("ssm_head",), "ones"),
+        "dt_bias": ParamDef((H,), ("ssm_head",), "zeros"),
+        "D_skip": ParamDef((H,), ("ssm_head",), "ones"),
+        "norm": ParamDef((d_in,), ("ssm_inner",), "ones"),
+        "out_proj": ParamDef((d_in, D), ("ssm_inner", "embed"), "scaled"),
+        "ln": cm.norm_defs(cfg),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv1d. x (B,S,C), w (W,C)."""
+    W = w.shape[0]
+    pad = jnp.pad(x, [(0, 0), (W - 1, 0), (0, 0)])
+    S = x.shape[1]
+    out = sum(pad[:, i:i + S, :] * w[i] for i in range(W))
+    return jax.nn.silu(out + b)
+
+
+def _conv_step(x_t, state, w, b):
+    """x_t (B,C) newest input; state (B,W-1,C) raw history."""
+    window = jnp.concatenate([state, x_t[:, None, :]], axis=1)  # (B,W,C)
+    out = jnp.einsum("bwc,wc->bc", window, w)
+    return jax.nn.silu(out + b), window[:, 1:, :]
+
+
+def ssd_chunked(x, B_, C_, dt, A_log, chunk: int, init_state=None):
+    """SSD chunked matmul form.
+
+    x (B,S,H,hd); B_/C_ (B,S,N); dt (B,S,H) post-softplus; A_log (H,).
+    Returns (y (B,S,H,hd) fp32, final_state (B,H,N,hd) fp32).
+    """
+    Bb, S, H, hd = x.shape
+    N = B_.shape[-1]
+    Q = min(chunk, S)
+    assert S % Q == 0, (S, Q)
+    c = S // Q
+    A = -jnp.exp(A_log.astype(jnp.float32))                 # (H,) negative
+    la = dt.astype(jnp.float32) * A                          # (B,S,H)
+    xd = x.astype(jnp.float32) * dt.astype(jnp.float32)[..., None]
+
+    la_c = la.reshape(Bb, c, Q, H)
+    x_c = xd.reshape(Bb, c, Q, H, hd)
+    B_c = B_.astype(jnp.float32).reshape(Bb, c, Q, N)
+    C_c = C_.astype(jnp.float32).reshape(Bb, c, Q, N)
+
+    cum = jnp.cumsum(la_c, axis=2)                            # (B,c,Q,H)
+    total = cum[:, :, -1, :]                                  # (B,c,H)
+
+    # intra-chunk: y_i += sum_{j<=i} (C_i.B_j) exp(cum_i-cum_j) x_j
+    CB = jnp.einsum("bcin,bcjn->bcij", C_c, B_c)
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]      # (B,c,i,j,H)
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    decay = jnp.where(mask[None, None, :, :, None], jnp.exp(diff), 0.0)
+    y_intra = jnp.einsum("bcij,bcijh,bcjhp->bcihp", CB, decay, x_c)
+
+    # end-of-chunk states: sum_j exp(total-cum_j) B_j (x) x_j
+    dte = jnp.exp(total[:, :, None, :] - cum)                 # (B,c,Q,H)
+    cstate = jnp.einsum("bcjh,bcjn,bcjhp->bchnp", dte, B_c, x_c)
+
+    s0 = (jnp.zeros((Bb, H, N, hd), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+
+    def step(st, xs):
+        tot_c, cs = xs
+        return st * jnp.exp(tot_c)[:, :, None, None] + cs, st
+
+    final, prev = jax.lax.scan(
+        step, s0, (jnp.moveaxis(total, 1, 0), jnp.moveaxis(cstate, 1, 0)))
+    prev = jnp.moveaxis(prev, 0, 1)                           # (B,c,H,N,hd)
+
+    y_inter = jnp.einsum("bcih,bcin,bchnp->bcihp", jnp.exp(cum), C_c, prev)
+    y = (y_intra + y_inter).reshape(Bb, S, H, hd)
+    return y, final
+
+
+def mamba_block(p, x, cfg: ModelConfig, plan: Optional[ShardingPlan],
+                return_state: bool = False):
+    """Pre-norm residual mamba2 mixer on (B,S,D)."""
+    s = cfg.ssm
+    d_in, H = _dims(cfg)
+    dt_ = x.dtype
+    h = cm.rms_norm(x, p["ln"]["scale"], cfg.norm_eps)
+    z = h @ p["w_z"].astype(dt_)
+    xr = h @ p["w_x"].astype(dt_)                              # raw conv input
+    Br = h @ p["w_B"].astype(dt_)
+    Cr = h @ p["w_C"].astype(dt_)
+    dtl = h @ p["w_dt"].astype(dt_)
+    xc = _causal_conv(xr, p["conv_x"].astype(dt_), p["conv_bx"].astype(dt_))
+    Bc = _causal_conv(Br, p["conv_B"].astype(dt_), p["conv_bB"].astype(dt_))
+    Cc = _causal_conv(Cr, p["conv_C"].astype(dt_), p["conv_bC"].astype(dt_))
+    if plan is not None and plan.rules.get("ssm_head"):
+        spec = P(plan.batch_axes, None, "model", None)
+        xc_ = xc.reshape(x.shape[0], x.shape[1], H, s.head_dim)
+        xc_ = wsc(xc_, spec, plan)
+    else:
+        xc_ = xc.reshape(x.shape[0], x.shape[1], H, s.head_dim)
+    dt = jax.nn.softplus(dtl.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    y, fstate = ssd_chunked(xc_, Bc, Cc, dt, p["A_log"], s.chunk)
+    y = y.astype(dt_) + p["D_skip"].astype(dt_)[None, None, :, None] * xc_
+    y = y.reshape(x.shape[0], x.shape[1], d_in)
+    y = y * jax.nn.silu(z)
+    y = cm.rms_norm(y, p["norm"], cfg.norm_eps)
+    out = y @ p["out_proj"].astype(dt_)
+    if return_state:
+        W = s.conv_width
+        tails = (xr[:, -(W - 1):, :], Br[:, -(W - 1):, :], Cr[:, -(W - 1):, :])
+        return x + out, (tails, fstate.astype(dt_))
+    return x + out, None
+
+
+def mamba_decode(p, x, cfg: ModelConfig, conv_x, conv_B, conv_C, ssm_state):
+    """One-token step. x (B,1,D); conv_* raw history; ssm_state (B,H,N,hd)."""
+    s = cfg.ssm
+    d_in, H = _dims(cfg)
+    dt_ = x.dtype
+    h = cm.rms_norm(x, p["ln"]["scale"], cfg.norm_eps)[:, 0]   # (B,D)
+    z = h @ p["w_z"].astype(dt_)
+    xr = h @ p["w_x"].astype(dt_)
+    Br = h @ p["w_B"].astype(dt_)
+    Cr = h @ p["w_C"].astype(dt_)
+    dtl = h @ p["w_dt"].astype(dt_)
+    xc, ncx = _conv_step(xr, conv_x, p["conv_x"].astype(dt_), p["conv_bx"].astype(dt_))
+    Bc, ncB = _conv_step(Br, conv_B, p["conv_B"].astype(dt_), p["conv_bB"].astype(dt_))
+    Cc, ncC = _conv_step(Cr, conv_C, p["conv_C"].astype(dt_), p["conv_bC"].astype(dt_))
+    x_ssm = xc.reshape(-1, H, s.head_dim)
+    dt = jax.nn.softplus(dtl.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    a = jnp.exp(dt * A)                                        # (B,H)
+    xd = x_ssm.astype(jnp.float32) * dt[..., None]
+    new_state = (ssm_state.astype(jnp.float32) * a[:, :, None, None]
+                 + jnp.einsum("bn,bhp->bhnp", Bc.astype(jnp.float32), xd))
+    y = jnp.einsum("bn,bhnp->bhp", Cc.astype(jnp.float32), new_state)
+    y = y.astype(dt_) + p["D_skip"].astype(dt_)[None, :, None] * x_ssm
+    y = y.reshape(-1, d_in)
+    y = y * jax.nn.silu(z)
+    y = cm.rms_norm(y, p["norm"], cfg.norm_eps)
+    out = (y @ p["out_proj"].astype(dt_))[:, None, :]
+    return x + out, (ncx, ncB, ncC), new_state.astype(dt_)
+
+
+class Mamba2LM:
+    def __init__(self, cfg: ModelConfig, plan: Optional[ShardingPlan] = None):
+        self.cfg, self.plan = cfg, plan
+
+    def _param_defs_raw(self):
+        cfg = self.cfg
+        from repro.models.transformer import _stack_defs
+        return {
+            "embed": cm.embed_defs(cfg),
+            "layers": _stack_defs(mamba_defs(cfg), cfg.n_layers),
+            "final_norm": cm.norm_defs(cfg),
+        }
+
+    def param_defs(self):
+        from repro.utils.params import with_dtype
+        return with_dtype(self._param_defs_raw(), self.cfg.param_dtype)
+
+    def init(self, key):
+        return init_params(self.param_defs(), key)
+
+    def param_specs(self):
+        return make_specs(self.param_defs(), self.plan.rules)
+
+    def _wsc_act(self, x):
+        return wsc(x, self.plan.act_spec() if self.plan else None, self.plan)
+
+    def forward(self, params, tokens):
+        cfg = self.cfg
+        x = self._wsc_act(cm.embed(params["embed"], tokens, cfg))
+        from repro.models.transformer import _remat
+        body = _remat(lambda p, h: mamba_block(p, h, cfg, self.plan)[0], cfg)
+
+        def scan_body(h, p_l):
+            return body(p_l, h), None
+
+        if cfg.scan_layers:
+            x, _ = jax.lax.scan(scan_body, x, params["layers"])
+        else:
+            n = jax.tree.leaves(params["layers"])[0].shape[0]
+            for i in range(n):
+                x, _ = scan_body(x, jax.tree.map(lambda a: a[i], params["layers"]))
+        x = cm.grad_dtype_barrier(x)
+        return cm.rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps), jnp.float32(0.0)
+
+    def loss(self, params, batch):
+        h, aux = self.forward(params, batch["tokens"])
+        ce, cnt = cm.chunked_xent(params["embed"], h, batch["labels"], self.cfg,
+                                  mask=batch.get("mask"))
+        return ce + aux, {"ce": ce, "aux": aux, "tokens": cnt}
+
+    # ----------------------------------------------------------- serving
+    def cache_struct(self, batch: int, max_len: int):
+        cfg = self.cfg
+        s = cfg.ssm
+        d_in, H = _dims(cfg)
+        L, W, N = cfg.n_layers, cfg.ssm.conv_width, s.d_state
+        f = lambda sh: jax.ShapeDtypeStruct(sh, cfg.act_dtype)
+        return {
+            "conv_x": f((L, batch, W - 1, d_in)),
+            "conv_B": f((L, batch, W - 1, N)),
+            "conv_C": f((L, batch, W - 1, N)),
+            "state": f((L, batch, H, N, s.head_dim)),
+        }
+
+    def init_cache(self, batch: int, max_len: int):
+        return jax.tree.map(lambda t: jnp.zeros(t.shape, t.dtype),
+                            self.cache_struct(batch, max_len))
+
+    def decode_step(self, params, cache, token, pos):
+        cfg = self.cfg
+        x = cm.embed(params["embed"], token[:, None], cfg)
+
+        def scan_body(h, xs):
+            p_l, cx, cb, cc, ss = xs
+            h2, (ncx, ncb, ncc), ns = mamba_decode(p_l, h, cfg, cx, cb, cc, ss)
+            return h2, (ncx, ncb, ncc, ns)
+
+        x, (ncx, ncb, ncc, ns) = jax.lax.scan(
+            scan_body, x,
+            (params["layers"], cache["conv_x"], cache["conv_B"],
+             cache["conv_C"], cache["state"]))
+        x = cm.rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
+        logits = cm.logits_last(params["embed"], x[:, 0], cfg)
+        return logits, {"conv_x": ncx, "conv_B": ncb, "conv_C": ncc, "state": ns}
+
+    def prefill(self, params, tokens, max_len: int):
+        cfg = self.cfg
+        x = self._wsc_act(cm.embed(params["embed"], tokens, cfg))
+
+        def scan_body(h, p_l):
+            h2, (tails, st) = mamba_block(p_l, h, cfg, self.plan, return_state=True)
+            return h2, (tails, st)
+
+        x, ((tx, tb, tc), states) = jax.lax.scan(scan_body, x, params["layers"])
+        x = cm.rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
+        logits = cm.logits_last(params["embed"], x[:, -1], cfg)
+        cache = {"conv_x": tx, "conv_B": tb, "conv_C": tc, "state": states}
+        return cache, logits

@@ -1,0 +1,334 @@
+"""Decoder-only transformer LM (dense / MoE / VLM backbone).
+
+Layers are stacked and scanned (HLO size O(1) in depth). MoE archs with
+``every > 1`` scan over "super-layers" of (every-1) dense layers + 1 MoE
+layer so the scanned pytree stays homogeneous.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.distributed.rules import ShardingPlan, wsc
+from repro.models import attention as att
+from repro.models import common as cm
+from repro.models.moe import moe_block, moe_defs
+from repro.utils.params import ParamDef, init_params, make_specs
+
+
+def _stack_defs(defs, n: int):
+    return jax.tree.map(
+        lambda d: ParamDef((n,) + d.shape, ("layer",) + d.axes, d.init, d.dtype,
+                           tuple(a + 1 for a in d.fan_in_axes)),
+        defs, is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def _remat(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        pol = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        return jax.checkpoint(fn, policy=pol)
+    return jax.checkpoint(fn)  # "full"
+
+
+class TransformerLM:
+    def __init__(self, cfg: ModelConfig, plan: Optional[ShardingPlan] = None):
+        self.cfg = cfg
+        self.plan = plan
+
+    # ------------------------------------------------------------ params
+    def _dense_layer_defs(self):
+        cfg = self.cfg
+        return {
+            "ln1": cm.norm_defs(cfg), "attn": att.attn_defs(cfg),
+            "ln2": cm.norm_defs(cfg), "mlp": cm.mlp_defs(cfg),
+        }
+
+    def _moe_layer_defs(self):
+        cfg = self.cfg
+        return {
+            "ln1": cm.norm_defs(cfg), "attn": att.attn_defs(cfg),
+            "ln2": cm.norm_defs(cfg), "moe": moe_defs(cfg),
+        }
+
+    def _unit_defs(self):
+        """One scanned unit; (n_units, defs)."""
+        cfg = self.cfg
+        if cfg.moe is None:
+            return cfg.n_layers, self._dense_layer_defs()
+        e = cfg.moe.every
+        if e == 1:
+            return cfg.n_layers, self._moe_layer_defs()
+        assert cfg.n_layers % e == 0
+        unit = {"moe_layer": self._moe_layer_defs()}
+        for i in range(e - 1):
+            unit[f"dense{i}"] = self._dense_layer_defs()
+        return cfg.n_layers // e, unit
+
+    def _param_defs_raw(self):
+        cfg = self.cfg
+        n_units, unit = self._unit_defs()
+        return {
+            "embed": cm.embed_defs(cfg),
+            "layers": _stack_defs(unit, n_units),
+            "final_norm": cm.norm_defs(cfg),
+        }
+
+    def param_defs(self):
+        from repro.utils.params import with_dtype
+        return with_dtype(self._param_defs_raw(), self.cfg.param_dtype)
+
+    def init(self, key):
+        return init_params(self.param_defs(), key)
+
+    def param_specs(self):
+        assert self.plan is not None
+        return make_specs(self.param_defs(), self.plan.rules)
+
+    # --------------------------------------------------------- sharding
+    def _wsc_act(self, x):
+        return wsc(x, self.plan.act_spec() if self.plan else None, self.plan)
+
+    def _constrain_qkv(self, q, k, v):
+        """q: (B,S,K,G,h) -> possibly reshaped per plan; returns q,k,v with
+        K',G' where kv was expanded if kv heads don't divide the axis."""
+        plan, cfg = self.plan, self.cfg
+        if plan is None:
+            return q, k, v
+        if plan.shard_heads:
+            if plan.kv_ok:
+                q = wsc(q, P(plan.batch_axes, None, "model", None, None), plan)
+                k = wsc(k, P(plan.batch_axes, None, "model", None), plan)
+                v = wsc(v, P(plan.batch_axes, None, "model", None), plan)
+            else:
+                # replicate kv, expand to full heads, shard the head dim
+                B, S, K, h = k.shape
+                G = cfg.q_per_kv
+                q = q.reshape(B, -1, K * G, 1, h)
+                k = jnp.repeat(k, G, axis=2)[:, :, :, None, :].reshape(B, S, K * G, h)
+                v = jnp.repeat(v, G, axis=2)[:, :, :, None, :].reshape(B, S, K * G, h)
+                q = wsc(q, P(plan.batch_axes, None, "model", None, None), plan)
+                k = wsc(k, P(plan.batch_axes, None, "model", None), plan)
+                v = wsc(v, P(plan.batch_axes, None, "model", None), plan)
+        else:
+            # sequence-parallel: q sharded on S, kv gathered
+            q = wsc(q, P(plan.batch_axes, "model", None, None, None), plan)
+            k = wsc(k, P(plan.batch_axes, None, None, None), plan)
+            v = wsc(v, P(plan.batch_axes, None, None, None), plan)
+        return q, k, v
+
+    # ------------------------------------------------------------ layers
+    def _attn_block(self, p, x, positions):
+        cfg = self.cfg
+        h = cm.rms_norm(x, p["ln1"]["scale"], cfg.norm_eps)
+        q, k, v = att.project_qkv(p["attn"], h, cfg, positions)
+        q, k, v = self._constrain_qkv(q, k, v)
+        ctx = att.blocked_attention(
+            q, k, v, chunk=cfg.attn_chunk, causal=True, q_positions=positions)
+        B, S = x.shape[:2]
+        ctx = ctx.reshape(B, S, cfg.n_heads, cfg.head_dim)
+        o = jnp.einsum("bshk,hkd->bsd", ctx, p["attn"]["wo"].astype(ctx.dtype))
+        return self._wsc_act(x + o)
+
+    def _ffn_block(self, p, x):
+        cfg = self.cfg
+        h = cm.rms_norm(x, p["ln2"]["scale"], cfg.norm_eps)
+        if "moe" in p:
+            out, aux = moe_block(p["moe"], h, cfg, self.plan)
+        else:
+            out, aux = cm.mlp(p["mlp"], h), jnp.float32(0.0)
+        return self._wsc_act(x + out), aux
+
+    def _layer(self, p, x, positions):
+        x = self._attn_block(p, x, positions)
+        x, aux = self._ffn_block(p, x)
+        return x, aux
+
+    def _unit_fwd(self, p_unit, x, positions):
+        cfg = self.cfg
+        aux = jnp.float32(0.0)
+        if cfg.moe is None:
+            x, a = self._layer(p_unit, x, positions)
+            return x, aux + a
+        e = cfg.moe.every
+        if e == 1:
+            return self._layer(p_unit, x, positions)
+        for i in range(e - 1):
+            x, a = self._layer(p_unit[f"dense{i}"], x, positions)
+            aux += a
+        x, a = self._layer(p_unit["moe_layer"], x, positions)
+        return x, aux + a
+
+    # ------------------------------------------------------------- train
+    def forward(self, params, tokens):
+        """tokens (B,S) -> final hidden states (B,S,D)."""
+        cfg = self.cfg
+        x = cm.embed(params["embed"], tokens, cfg)
+        x = self._wsc_act(x)
+        positions = jnp.arange(tokens.shape[1])
+        body = _remat(lambda p, h: self._unit_fwd(p, h, positions), cfg)
+
+        def scan_body(carry, p_unit):
+            h, aux = carry
+            h2, a = body(p_unit, h)
+            return (h2, aux + a), None
+
+        n = jax.tree.leaves(params["layers"])[0].shape[0]
+        if cfg.scan_layers and cfg.scan_block and n % cfg.scan_block == 0:
+            # two-level scan (sqrt-remat): the outer scan saves only
+            # n/scan_block residuals; the inner group is recomputed in
+            # backward. Trades ~1 extra forward for a scan_block-fold
+            # reduction of the stacked residual buffer.
+            blk = cfg.scan_block
+            grouped = jax.tree.map(
+                lambda a_: a_.reshape((n // blk, blk) + a_.shape[1:]),
+                params["layers"])
+
+            def _group(p_group, h):
+                def inner(c, p_l):
+                    h2, a = body(p_l, c[0])
+                    return (h2, c[1] + a), None
+                (h, aux), _ = jax.lax.scan(inner, (h, jnp.float32(0.0)), p_group)
+                return h, aux
+
+            group_body = _remat(_group, cfg)
+
+            def outer(carry, p_group):
+                h, aux = carry
+                h2, a = group_body(p_group, h)
+                return (h2, aux + a), None
+
+            (x, aux), _ = jax.lax.scan(outer, (x, jnp.float32(0.0)), grouped)
+        elif cfg.scan_layers:
+            (x, aux), _ = jax.lax.scan(scan_body, (x, jnp.float32(0.0)),
+                                       params["layers"])
+        else:
+            aux = jnp.float32(0.0)
+            for i in range(n):
+                p_i = jax.tree.map(lambda a_: a_[i], params["layers"])
+                (x, aux), _ = scan_body((x, aux), p_i)
+        x = cm.grad_dtype_barrier(x)
+        x = cm.rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
+        return x, aux
+
+    def loss(self, params, batch):
+        """batch: {tokens (B,S), labels (B,S)} -> (loss, metrics)."""
+        h, aux = self.forward(params, batch["tokens"])
+        ce, cnt = cm.chunked_xent(params["embed"], h, batch["labels"], self.cfg,
+                                  mask=batch.get("mask"))
+        return ce + aux, {"ce": ce, "aux": aux, "tokens": cnt}
+
+    # ----------------------------------------------------------- serving
+    def cache_struct(self, batch: int, max_len: int):
+        cfg = self.cfg
+        n_units, _ = self._unit_defs()
+        per = cfg.moe.every if cfg.moe else 1
+        L = n_units * per
+        sh = (L, batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+        return {
+            "k": jax.ShapeDtypeStruct(sh, cfg.act_dtype),
+            "v": jax.ShapeDtypeStruct(sh, cfg.act_dtype),
+        }
+
+    def init_cache(self, batch: int, max_len: int):
+        return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                            self.cache_struct(batch, max_len))
+
+    def _decode_layer(self, p, x, kc, vc, pos):
+        """x (B,1,D); kc/vc (B,Smax,K,h) single-layer cache; pos scalar."""
+        cfg, plan = self.cfg, self.plan
+        h = cm.rms_norm(x, p["ln1"]["scale"], cfg.norm_eps)
+        positions = jnp.full((1,), pos)
+        q, k, v = att.project_qkv(p["attn"], h, cfg, positions)
+        kc = att.update_cache(kc, k, pos, cfg.cache_update)
+        vc = att.update_cache(vc, v, pos, cfg.cache_update)
+        if plan is not None:
+            cs = P(plan.cache_batch, plan.cache_seq, plan.cache_kv, None)
+            kc, vc = wsc(kc, cs, plan), wsc(vc, cs, plan)
+        ctx = att.decode_attention(q, kc, vc, pos)
+        B = x.shape[0]
+        ctx = ctx.reshape(B, 1, cfg.n_heads, cfg.head_dim)
+        o = jnp.einsum("bshk,hkd->bsd", ctx, p["attn"]["wo"].astype(ctx.dtype))
+        x = x + o
+        x, _ = self._ffn_block(p, x)
+        return x, kc, vc
+
+    def _iter_layer_params(self, params):
+        """Yield per-layer param pytrees in depth order (units unrolled)."""
+        cfg = self.cfg
+        per = cfg.moe.every if cfg.moe else 1
+        names = ([None] if per == 1 else
+                 [f"dense{i}" for i in range(per - 1)] + ["moe_layer"])
+        return names
+
+    def decode_step(self, params, cache, token, pos):
+        """token (B,) int32, pos scalar -> (logits (B,Vp), new cache)."""
+        cfg = self.cfg
+        x = cm.embed(params["embed"], token[:, None], cfg)  # (B,1,D)
+        names = self._iter_layer_params(params)
+        per = len(names)
+
+        def scan_body(x, xs):
+            p_unit, kcs, vcs = xs  # kcs: (per, B, S, K, h)
+            new_k, new_v = [], []
+            for i, nm in enumerate(names):
+                p_l = p_unit if nm is None else p_unit[nm]
+                x2, kc, vc = self._decode_layer(p_l, x, kcs[i], vcs[i], pos)
+                x = x2
+                new_k.append(kc)
+                new_v.append(vc)
+            return x, (jnp.stack(new_k), jnp.stack(new_v))
+
+        n_units, _ = self._unit_defs()
+        kc = cache["k"].reshape((n_units, per) + cache["k"].shape[1:])
+        vc = cache["v"].reshape((n_units, per) + cache["v"].shape[1:])
+        x, (nk, nv) = jax.lax.scan(scan_body, x, (params["layers"], kc, vc))
+        x = cm.rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
+        logits = cm.logits_last(params["embed"], x[:, 0], cfg)
+        new_cache = {"k": nk.reshape(cache["k"].shape),
+                     "v": nv.reshape(cache["v"].shape)}
+        return logits, new_cache
+
+    def prefill(self, params, tokens, max_len: int):
+        """tokens (B,S) -> (cache with [0:S] filled, last-token logits)."""
+        cfg = self.cfg
+        B, S = tokens.shape
+        x = cm.embed(params["embed"], tokens, cfg)
+        x = self._wsc_act(x)
+        positions = jnp.arange(S)
+        names = self._iter_layer_params(params)
+
+        def scan_body(x, p_unit):
+            ks, vs = [], []
+            for nm in names:
+                p_l = p_unit if nm is None else p_unit[nm]
+                h = cm.rms_norm(x, p_l["ln1"]["scale"], cfg.norm_eps)
+                q, k, v = att.project_qkv(p_l["attn"], h, cfg, positions)
+                qc, kc_, vc_ = self._constrain_qkv(q, k, v)
+                ctx = att.blocked_attention(qc, kc_, vc_, chunk=cfg.attn_chunk,
+                                            causal=True, q_positions=positions)
+                ctx = ctx.reshape(B, S, cfg.n_heads, cfg.head_dim)
+                o = jnp.einsum("bshk,hkd->bsd", ctx,
+                               p_l["attn"]["wo"].astype(ctx.dtype))
+                x = self._wsc_act(x + o)
+                x, _ = self._ffn_block(p_l, x)
+                ks.append(k)
+                vs.append(v)
+            return x, (jnp.stack(ks), jnp.stack(vs))
+
+        x, (nk, nv) = jax.lax.scan(scan_body, x, params["layers"])
+        x = cm.rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
+        logits = cm.logits_last(params["embed"], x[:, -1], cfg)
+        L = nk.shape[0] * nk.shape[1]
+        nk = nk.reshape((L, B, S) + nk.shape[-2:])
+        nv = nv.reshape((L, B, S) + nv.shape[-2:])
+        if max_len > S:
+            pad = [(0, 0), (0, 0), (0, max_len - S), (0, 0), (0, 0)]
+            nk, nv = jnp.pad(nk, pad), jnp.pad(nv, pad)
+        return {"k": nk, "v": nv}, logits

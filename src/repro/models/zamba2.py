@@ -1,0 +1,240 @@
+"""Zamba2-style hybrid: Mamba2 backbone + one weight-TIED transformer block
+applied after every `shared_attn_every` mamba layers.
+
+Layers are grouped as (G groups of [k mamba layers + shared attn/mlp block])
++ a tail of (n_layers % k) mamba layers, so scanning over groups gives each
+shared-block application its own KV-cache slice without lax.cond gymnastics.
+
+Simplification vs the released checkpoints (noted in DESIGN.md): the shared
+block consumes the residual stream directly (no concat-with-embedding
+re-projection, no per-invocation LoRA deltas).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.distributed.rules import ShardingPlan, wsc
+from repro.models import attention as att
+from repro.models import common as cm
+from repro.models.mamba2 import (_dims, mamba_block, mamba_decode, mamba_defs)
+from repro.models.transformer import TransformerLM, _remat, _stack_defs
+from repro.utils.params import init_params, make_specs
+
+
+class Zamba2LM:
+    def __init__(self, cfg: ModelConfig, plan: Optional[ShardingPlan] = None):
+        assert cfg.shared_attn_every > 0 and cfg.ssm is not None
+        self.cfg, self.plan = cfg, plan
+        self.k = cfg.shared_attn_every
+        self.G = cfg.n_layers // self.k
+        self.tail = cfg.n_layers % self.k
+        # reuse transformer attention/mlp machinery for the shared block
+        self._tf = TransformerLM(cfg, plan)
+
+    # ------------------------------------------------------------ params
+    def _param_defs_raw(self):
+        cfg = self.cfg
+        md = mamba_defs(cfg)
+        d = {
+            "embed": cm.embed_defs(cfg),
+            "groups": _stack_defs(_stack_defs(md, self.k), self.G),
+            "shared": {
+                "ln1": cm.norm_defs(cfg), "attn": att.attn_defs(cfg),
+                "ln2": cm.norm_defs(cfg), "mlp": cm.mlp_defs(cfg),
+            },
+            "final_norm": cm.norm_defs(cfg),
+        }
+        if self.tail:
+            d["tail"] = _stack_defs(md, self.tail)
+        return d
+
+    def param_defs(self):
+        from repro.utils.params import with_dtype
+        return with_dtype(self._param_defs_raw(), self.cfg.param_dtype)
+
+    def init(self, key):
+        return init_params(self.param_defs(), key)
+
+    def param_specs(self):
+        return make_specs(self.param_defs(), self.plan.rules)
+
+    def _wsc_act(self, x):
+        return wsc(x, self.plan.act_spec() if self.plan else None, self.plan)
+
+    # ------------------------------------------------------------- train
+    def _group_fwd(self, p_group, shared, x, positions):
+        cfg = self.cfg
+        for j in range(self.k):
+            p_j = jax.tree.map(lambda a: a[j], p_group)
+            x, _ = mamba_block(p_j, x, cfg, self.plan)
+        x = self._tf._attn_block(shared, x, positions)
+        x, _ = self._tf._ffn_block(shared, x)
+        return x
+
+    def forward(self, params, tokens):
+        cfg = self.cfg
+        x = self._wsc_act(cm.embed(params["embed"], tokens, cfg))
+        positions = jnp.arange(tokens.shape[1])
+        shared = params["shared"]
+        body = _remat(lambda p, h: self._group_fwd(p, shared, h, positions), cfg)
+
+        def scan_body(h, p_g):
+            return body(p_g, h), None
+
+        x, _ = jax.lax.scan(scan_body, x, params["groups"])
+        for j in range(self.tail):
+            p_j = jax.tree.map(lambda a: a[j], params["tail"])
+            x, _ = mamba_block(p_j, x, cfg, self.plan)
+        x = cm.grad_dtype_barrier(x)
+        return cm.rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps), jnp.float32(0.0)
+
+    def loss(self, params, batch):
+        h, aux = self.forward(params, batch["tokens"])
+        ce, cnt = cm.chunked_xent(params["embed"], h, batch["labels"], self.cfg,
+                                  mask=batch.get("mask"))
+        return ce + aux, {"ce": ce, "aux": aux, "tokens": cnt}
+
+    # ----------------------------------------------------------- serving
+    def cache_struct(self, batch: int, max_len: int):
+        cfg = self.cfg
+        s = cfg.ssm
+        d_in, H = _dims(cfg)
+        W, N = s.conv_width, s.d_state
+        L = cfg.n_layers
+        f = lambda sh: jax.ShapeDtypeStruct(sh, cfg.act_dtype)
+        return {
+            "conv_x": f((L, batch, W - 1, d_in)),
+            "conv_B": f((L, batch, W - 1, N)),
+            "conv_C": f((L, batch, W - 1, N)),
+            "state": f((L, batch, H, N, s.head_dim)),
+            "attn_k": f((self.G, batch, max_len, cfg.n_kv_heads, cfg.head_dim)),
+            "attn_v": f((self.G, batch, max_len, cfg.n_kv_heads, cfg.head_dim)),
+        }
+
+    def init_cache(self, batch: int, max_len: int):
+        return jax.tree.map(lambda t: jnp.zeros(t.shape, t.dtype),
+                            self.cache_struct(batch, max_len))
+
+    def _shared_decode(self, shared, x, kc, vc, pos):
+        cfg, plan = self.cfg, self.plan
+        h = cm.rms_norm(x, shared["ln1"]["scale"], cfg.norm_eps)
+        q, k, v = att.project_qkv(shared["attn"], h, cfg, jnp.full((1,), pos))
+        kc = att.update_cache(kc, k, pos, cfg.cache_update)
+        vc = att.update_cache(vc, v, pos, cfg.cache_update)
+        if plan is not None:
+            cs = P(plan.cache_batch, plan.cache_seq, plan.cache_kv, None)
+            kc, vc = wsc(kc, cs, plan), wsc(vc, cs, plan)
+        ctx = att.decode_attention(q, kc, vc, pos)
+        B = x.shape[0]
+        ctx = ctx.reshape(B, 1, cfg.n_heads, cfg.head_dim)
+        o = jnp.einsum("bshk,hkd->bsd", ctx, shared["attn"]["wo"].astype(ctx.dtype))
+        x = x + o
+        x, _ = self._tf._ffn_block(shared, x)
+        return x, kc, vc
+
+    def decode_step(self, params, cache, token, pos):
+        cfg = self.cfg
+        x = cm.embed(params["embed"], token[:, None], cfg)
+        shared = params["shared"]
+        k = self.k
+
+        def regroup(t):  # (L,...) -> (G, k, ...) for the grouped prefix
+            return t[: self.G * k].reshape((self.G, k) + t.shape[1:])
+
+        def scan_body(h, xs):
+            p_g, cx, cb, cc_, ss, kc, vc = xs
+            ncx, ncb, ncc, ns = [], [], [], []
+            for j in range(k):
+                p_j = jax.tree.map(lambda a: a[j], p_g)
+                h, (a_, b_, c_), s_ = mamba_decode(
+                    p_j, h, cfg, cx[j], cb[j], cc_[j], ss[j])
+                ncx.append(a_); ncb.append(b_); ncc.append(c_); ns.append(s_)
+            h, kc, vc = self._shared_decode(shared, h, kc, vc, pos)
+            return h, (jnp.stack(ncx), jnp.stack(ncb), jnp.stack(ncc),
+                       jnp.stack(ns), kc, vc)
+
+        xs = (params["groups"], regroup(cache["conv_x"]), regroup(cache["conv_B"]),
+              regroup(cache["conv_C"]), regroup(cache["state"]),
+              cache["attn_k"], cache["attn_v"])
+        x, (ncx, ncb, ncc, ns, nk, nv) = jax.lax.scan(scan_body, x, xs)
+
+        def flat(t, ref):  # (G,k,...) -> (G*k,...) then append tail
+            return t.reshape((self.G * k,) + t.shape[2:])
+
+        new = {"conv_x": flat(ncx, None), "conv_B": flat(ncb, None),
+               "conv_C": flat(ncc, None), "state": flat(ns, None),
+               "attn_k": nk, "attn_v": nv}
+        if self.tail:
+            tx, tb, tc, ts = [], [], [], []
+            for j in range(self.tail):
+                p_j = jax.tree.map(lambda a: a[j], params["tail"])
+                i = self.G * k + j
+                x, (a_, b_, c_), s_ = mamba_decode(
+                    p_j, x, cfg, cache["conv_x"][i], cache["conv_B"][i],
+                    cache["conv_C"][i], cache["state"][i])
+                tx.append(a_); tb.append(b_); tc.append(c_); ts.append(s_)
+            new["conv_x"] = jnp.concatenate([new["conv_x"], jnp.stack(tx)])
+            new["conv_B"] = jnp.concatenate([new["conv_B"], jnp.stack(tb)])
+            new["conv_C"] = jnp.concatenate([new["conv_C"], jnp.stack(tc)])
+            new["state"] = jnp.concatenate([new["state"], jnp.stack(ts)])
+        x = cm.rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
+        logits = cm.logits_last(params["embed"], x[:, 0], cfg)
+        return logits, new
+
+    def prefill(self, params, tokens, max_len: int):
+        cfg = self.cfg
+        B, S = tokens.shape
+        x = self._wsc_act(cm.embed(params["embed"], tokens, cfg))
+        positions = jnp.arange(S)
+        shared = params["shared"]
+
+        def scan_body(h, p_g):
+            tails, states = [], []
+            for j in range(self.k):
+                p_j = jax.tree.map(lambda a: a[j], p_g)
+                h, (t3, st) = mamba_block(p_j, h, cfg, self.plan, return_state=True)
+                tails.append(t3); states.append(st)
+            # shared attention over the full prefix, keep kv
+            hh = cm.rms_norm(h, shared["ln1"]["scale"], cfg.norm_eps)
+            q, kk, vv = att.project_qkv(shared["attn"], hh, cfg, positions)
+            qc, kc, vc = self._tf._constrain_qkv(q, kk, vv)
+            ctx = att.blocked_attention(qc, kc, vc, chunk=cfg.attn_chunk,
+                                        causal=True, q_positions=positions)
+            ctx = ctx.reshape(B, S, cfg.n_heads, cfg.head_dim)
+            o = jnp.einsum("bshk,hkd->bsd", ctx, shared["attn"]["wo"].astype(ctx.dtype))
+            h = h + o
+            h, _ = self._tf._ffn_block(shared, h)
+            tx = jnp.stack([t[0] for t in tails])
+            tb = jnp.stack([t[1] for t in tails])
+            tc = jnp.stack([t[2] for t in tails])
+            return h, (tx, tb, tc, jnp.stack(states), kk, vv)
+
+        x, (tx, tb, tc, ss, ks, vs) = jax.lax.scan(scan_body, x, params["groups"])
+
+        def flat(t):
+            return t.reshape((self.G * self.k,) + t.shape[2:])
+
+        cache = {"conv_x": flat(tx), "conv_B": flat(tb), "conv_C": flat(tc),
+                 "state": flat(ss)}
+        if self.tail:
+            a4, b4, c4, s4 = [], [], [], []
+            for j in range(self.tail):
+                p_j = jax.tree.map(lambda a: a[j], params["tail"])
+                x, (t3, st) = mamba_block(p_j, x, cfg, self.plan, return_state=True)
+                a4.append(t3[0]); b4.append(t3[1]); c4.append(t3[2]); s4.append(st)
+            cache["conv_x"] = jnp.concatenate([cache["conv_x"], jnp.stack(a4)])
+            cache["conv_B"] = jnp.concatenate([cache["conv_B"], jnp.stack(b4)])
+            cache["conv_C"] = jnp.concatenate([cache["conv_C"], jnp.stack(c4)])
+            cache["state"] = jnp.concatenate([cache["state"], jnp.stack(s4)])
+        if max_len > S:
+            pad = [(0, 0), (0, 0), (0, max_len - S), (0, 0), (0, 0)]
+            ks, vs = jnp.pad(ks, pad), jnp.pad(vs, pad)
+        cache["attn_k"], cache["attn_v"] = ks, vs
+        x = cm.rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
+        logits = cm.logits_last(params["embed"], x[:, -1], cfg)
+        return cache, logits

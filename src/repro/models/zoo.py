@@ -1,0 +1,31 @@
+"""Model factory: ModelConfig -> model object implementing the common API.
+
+API (duck-typed, all models):
+  param_defs() / init(key) / param_specs()
+  loss(params, batch) -> (scalar, metrics)
+  prefill(params, inputs, max_len) -> (cache, logits)
+  decode_step(params, cache, token, pos) -> (logits, cache)
+  cache_struct(batch, max_len) -> ShapeDtypeStruct pytree
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.configs.base import ModelConfig
+from repro.distributed.rules import ShardingPlan
+from repro.models.encdec import EncDecLM
+from repro.models.mamba2 import Mamba2LM
+from repro.models.transformer import TransformerLM
+from repro.models.zamba2 import Zamba2LM
+
+
+def get_model(cfg: ModelConfig, plan: Optional[ShardingPlan] = None):
+    if cfg.family in ("dense", "moe", "vlm"):
+        return TransformerLM(cfg, plan)
+    if cfg.family == "ssm":
+        return Mamba2LM(cfg, plan)
+    if cfg.family == "hybrid":
+        return Zamba2LM(cfg, plan)
+    if cfg.family == "encdec":
+        return EncDecLM(cfg, plan)
+    raise ValueError(f"unknown family {cfg.family!r}")

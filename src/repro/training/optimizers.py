@@ -1,0 +1,155 @@
+"""Optimizers (optax is not available): AdamW and Adafactor.
+
+Both are pytree->pytree with states sharded like their params (ZeRO-style:
+param specs propagate to state specs via `state_specs`). Adafactor keeps
+factored second moments (row/col) for >=2D params — the reason the 400B
+archs fit a single v5e pod (DESIGN.md §7).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils.params import ParamDef, is_def
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    name: str = "adamw"
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    # adafactor
+    min_dim_factored: int = 128
+    decay_exponent: float = 0.8
+
+
+def schedule(cfg: OptConfig, step):
+    warm = jnp.minimum(1.0, (step + 1) / max(cfg.warmup_steps, 1))
+    return cfg.lr * warm
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm):
+    g = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(g, 1e-9))
+    # NB: keep each leaf's dtype — upcasting here materializes a full f32
+    # copy of the gradient tree (6.3 GiB/chip on llama3-405b).
+    return jax.tree.map(lambda x: x * scale.astype(x.dtype), grads), g
+
+
+# ------------------------------------------------------------------- adamw
+def adamw_init(params):
+    z = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {"m": jax.tree.map(z, params), "v": jax.tree.map(z, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(cfg: OptConfig, grads, state, params):
+    step = state["step"] + 1
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    lr = schedule(cfg, state["step"])
+    b1, b2 = cfg.b1, cfg.b2
+    m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+                     state["m"], grads)
+    v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(
+        g.astype(jnp.float32)), state["v"], grads)
+    c1 = 1 - b1 ** step.astype(jnp.float32)
+    c2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, m_, v_):
+        u = (m_ / c1) / (jnp.sqrt(v_ / c2) + cfg.eps)
+        u = u + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, m, v)
+    return new_params, {"m": m, "v": v, "step": step}, {"grad_norm": gnorm, "lr": lr}
+
+
+# --------------------------------------------------------------- adafactor
+def _factored(shape, min_dim):
+    return len(shape) >= 2 and shape[-1] >= min_dim and shape[-2] >= min_dim
+
+
+def adafactor_init(cfg: OptConfig, params):
+    def per(p):
+        if _factored(p.shape, cfg.min_dim_factored):
+            return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+    return {"f": jax.tree.map(per, params), "step": jnp.zeros((), jnp.int32)}
+
+
+def adafactor_update(cfg: OptConfig, grads, state, params):
+    step = state["step"] + 1
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    lr = schedule(cfg, state["step"])
+    beta = 1.0 - (step.astype(jnp.float32)) ** (-cfg.decay_exponent)
+
+    def per(g, s, p):
+        g = g.astype(jnp.float32)
+        g2 = g * g + 1e-30
+        if "vr" in s:
+            vr = beta * s["vr"] + (1 - beta) * g2.mean(axis=-1)
+            vc = beta * s["vc"] + (1 - beta) * g2.mean(axis=-2)
+            r = vr / jnp.maximum(vr.mean(axis=-1, keepdims=True), 1e-30)
+            pre = jnp.sqrt(r[..., None] * vc[..., None, :])
+            u = g / jnp.maximum(pre, 1e-30)
+            ns = {"vr": vr, "vc": vc}
+        else:
+            v = beta * s["v"] + (1 - beta) * g2
+            u = g / jnp.sqrt(v + 1e-30)
+            ns = {"v": v}
+        # update clipping (RMS <= 1) per Shazeer & Stern
+        rms = jnp.sqrt(jnp.mean(u * u) + 1e-30)
+        u = u / jnp.maximum(1.0, rms)
+        u = u + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype), ns
+
+    flat_g, td = jax.tree.flatten(grads)
+    flat_s = td.flatten_up_to(state["f"])
+    flat_p = jax.tree.leaves(params)
+    outs = [per(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)]
+    new_params = jax.tree.unflatten(td, [o[0] for o in outs])
+    new_f = jax.tree.unflatten(td, [o[1] for o in outs])
+    return new_params, {"f": new_f, "step": step}, {"grad_norm": gnorm, "lr": lr}
+
+
+# ----------------------------------------------------------------- factory
+def make_optimizer(name: str, cfg: OptConfig = None):
+    cfg = cfg or OptConfig(name=name)
+    if name == "adamw":
+        return cfg, adamw_init, lambda g, s, p: adamw_update(cfg, g, s, p)
+    if name == "adafactor":
+        return cfg, lambda p: adafactor_init(cfg, p), \
+            lambda g, s, p: adafactor_update(cfg, g, s, p)
+    raise ValueError(name)
+
+
+def state_specs(name: str, cfg: OptConfig, param_specs, params_abstract):
+    """PartitionSpecs for the optimizer state, mirroring param specs."""
+    from jax.sharding import PartitionSpec as P
+    if name == "adamw":
+        return {"m": param_specs, "v": param_specs, "step": P()}
+
+    def per(spec, p):
+        t = tuple(spec) + (None,) * (len(p.shape) - len(tuple(spec)))
+        if _factored(p.shape, cfg.min_dim_factored):
+            return {"vr": P(*t[:-1]), "vc": P(*(t[:-2] + t[-1:]))}
+        return {"v": spec}
+
+    f = jax.tree.map(per, param_specs, params_abstract,
+                     is_leaf=lambda x: isinstance(x, type(P())))
+    return {"f": f, "step": P()}

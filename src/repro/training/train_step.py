@@ -1,0 +1,78 @@
+"""train_step: microbatched grad accumulation + optimizer + (optional)
+int8 gradient compression, assembled per (arch, mesh, shape).
+
+The returned step function is pure (params, opt_state, batch, step) ->
+(params, opt_state, metrics) and is what launch/dryrun.py lowers.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.distributed.compression import compress_decompress
+from repro.distributed.rules import ShardingPlan, wsc
+from repro.training import optimizers as opt
+
+
+def _microbatch_grads(loss_fn, params, batch, n_micro: int, plan,
+                      accum_dtype=jnp.float32):
+    """Mean grads over n_micro sequential microbatches (lax.scan)."""
+    if n_micro == 1:
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch)
+        return grads, loss, metrics
+
+    def reshape(x):  # (B, ...) -> (n, B/n, ...)
+        return x.reshape((n_micro, x.shape[0] // n_micro) + x.shape[1:])
+
+    mb = jax.tree.map(reshape, batch)
+
+    def body(carry, micro):
+        acc, loss_acc = carry
+        if plan is not None:
+            micro = {k: wsc(v, P(plan.batch_axes), plan) if v.ndim == 1 else
+                     wsc(v, P(plan.batch_axes, *([None] * (v.ndim - 1))), plan)
+                     for k, v in micro.items()}
+        (loss, _), g = jax.value_and_grad(loss_fn, has_aux=True)(params, micro)
+        acc = jax.tree.map(lambda a, b: a + b.astype(a.dtype), acc, g)
+        return (acc, loss_acc + loss), None
+
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, accum_dtype), params)
+    (gsum, loss_sum), _ = jax.lax.scan(body, (zeros, jnp.float32(0.0)), mb)
+    grads = jax.tree.map(lambda g: g / n_micro, gsum)
+    return grads, loss_sum / n_micro, {}
+
+
+def make_train_step(model, cfg: ModelConfig, plan: Optional[ShardingPlan],
+                    opt_name: Optional[str] = None,
+                    grad_compression: bool = False,
+                    opt_cfg: Optional[opt.OptConfig] = None):
+    opt_name = opt_name or cfg.optimizer
+    ocfg, opt_init, opt_update = opt.make_optimizer(opt_name, opt_cfg)
+
+    def loss_fn(params, batch):
+        return model.loss(params, batch)
+
+    def train_step(params, opt_state, batch, step):
+        grads, loss, _ = _microbatch_grads(
+            loss_fn, params, batch, cfg.grad_accum_microbatches, plan,
+            jnp.dtype(cfg.grad_accum_dtype))
+        if grad_compression:
+            grads = jax.tree.map(compress_decompress, grads)
+        new_params, new_state, om = opt_update(grads, opt_state, params)
+        metrics = {"loss": loss, **om, "step": step + 1}
+        return new_params, new_state, metrics
+
+    return train_step, opt_init, ocfg
+
+
+def make_eval_step(model):
+    def eval_step(params, batch):
+        loss, metrics = model.loss(params, batch)
+        return {"loss": loss, **metrics}
+    return eval_step

@@ -1,0 +1,153 @@
+"""Minimal pytree-native parameter/module system.
+
+flax/optax are not available in this environment, so the framework carries
+its own parameter abstraction:
+
+- A model declares its parameters as a nested dict of :class:`ParamDef`
+  (shape + logical axis names + initializer).
+- ``init_params`` materializes the pytree of arrays.
+- ``make_specs`` maps logical axis names -> mesh axes through a rules table
+  (see repro.distributed.rules) producing a matching pytree of
+  ``PartitionSpec`` for pjit in/out shardings.
+
+Logical axis names used across the model zoo:
+  layer, embed, heads, kv_heads, head_dim, mlp, vocab, expert, conv,
+  ssm_state, ssm_head, stage  (None = replicated dimension)
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Mapping
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: tuple
+    axes: tuple  # logical axis name (str) or None per dim
+    init: str = "normal"  # normal | zeros | ones | embed | scaled
+    dtype: Any = jnp.float32
+    fan_in_axes: tuple = ()  # dims counted as fan-in for "scaled"
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _initializer(d: ParamDef) -> Callable:
+    if d.init == "zeros":
+        return lambda k: jnp.zeros(d.shape, d.dtype)
+    if d.init == "ones":
+        return lambda k: jnp.ones(d.shape, d.dtype)
+    if d.init == "embed":
+        return lambda k: jax.random.normal(k, d.shape, d.dtype)
+    if d.init == "scaled":
+        fan_dims = d.fan_in_axes or tuple(range(len(d.shape) - 1))
+        fan_in = max(1, math.prod(d.shape[i] for i in fan_dims))
+        std = 1.0 / math.sqrt(fan_in)
+        return lambda k: (jax.random.normal(k, d.shape) * std).astype(d.dtype)
+    if d.init == "normal":
+        return lambda k: (jax.random.normal(k, d.shape) * 0.02).astype(d.dtype)
+    raise ValueError(f"unknown init {d.init}")
+
+
+def is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def init_params(defs, key):
+    """Materialize a nested dict of ParamDef into arrays (deterministic)."""
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=is_def)
+    keys = jax.random.split(key, len(leaves))
+    vals = [_initializer(d)(k) for d, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def abstract_params(defs):
+    """ShapeDtypeStruct pytree matching the defs — for eval_shape/dry-run."""
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, d.dtype), defs, is_leaf=is_def
+    )
+
+
+def make_specs(defs, rules: Mapping[str, Any]):
+    """logical axes -> PartitionSpec through a rules table.
+
+    rules maps logical axis name -> mesh axis (str), tuple of mesh axes,
+    or None.  Unknown axis names are an error (catches typos early).
+    """
+
+    def one(d: ParamDef) -> P:
+        parts = []
+        used = set()
+        for ax in d.axes:
+            if ax is None:
+                parts.append(None)
+                continue
+            if ax not in rules:
+                raise KeyError(f"logical axis {ax!r} missing from rules")
+            m = rules[ax]
+            # never map two tensor dims onto the same mesh axis
+            flat = (m,) if isinstance(m, str) else tuple(m or ())
+            if any(f in used for f in flat):
+                parts.append(None)
+                continue
+            used.update(flat)
+            parts.append(m)
+        return P(*parts)
+
+    return jax.tree.map(one, defs, is_leaf=is_def)
+
+
+def validate_divisibility(defs, rules, mesh_shape: Mapping[str, int]):
+    """Check every sharded dim divides by the mesh axes it maps to."""
+    problems = []
+
+    def visit(path, d: ParamDef):
+        for dim, ax in zip(d.shape, d.axes):
+            if ax is None or ax not in rules or rules[ax] is None:
+                continue
+            m = rules[ax]
+            flat = (m,) if isinstance(m, str) else tuple(m)
+            n = math.prod(mesh_shape[f] for f in flat)
+            if dim % n:
+                problems.append((jax.tree_util.keystr(path), dim, ax, n))
+
+    jax.tree_util.tree_map_with_path(visit, defs, is_leaf=is_def)
+    return problems
+
+
+def with_dtype(defs, dtype):
+    """Set the storage dtype of all float params (cfg.param_dtype)."""
+    import jax.numpy as _jnp
+    dt = _jnp.dtype(dtype)
+
+    def one(d: ParamDef) -> ParamDef:
+        if _jnp.issubdtype(_jnp.dtype(d.dtype), _jnp.floating):
+            return dataclasses.replace(d, dtype=dt)
+        return d
+
+    return jax.tree.map(one, defs, is_leaf=is_def)
+
+
+def param_count(tree) -> int:
+    return sum(math.prod(x.shape) for x in jax.tree.leaves(tree))
+
+
+def param_bytes(tree) -> int:
+    return sum(
+        math.prod(x.shape) * jnp.dtype(x.dtype).itemsize
+        for x in jax.tree.leaves(tree)
+    )
+
+
+def cast_floating(tree, dtype):
+    def cast(x):
+        if jnp.issubdtype(x.dtype, jnp.floating):
+            return x.astype(dtype)
+        return x
+
+    return jax.tree.map(cast, tree)

@@ -1,0 +1,48 @@
+"""HLO parser unit tests on synthetic module text."""
+from repro.distributed.hlo_analysis import analyze_collectives
+from repro.distributed.hlo_cost import analyze_cost
+
+HLO = """
+%body.1 (p: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+  %p = (s32[], f32[8,8]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[8,8] get-tuple-element(%p), index=1
+  %ar = f32[8,8]{1,0} all-reduce(%x), replica_groups={{0,1,2,3}}, to_apply=%add.1
+  %one = s32[] constant(1)
+  %i2 = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[8,8]) tuple(%i2, %ar)
+}
+%cond.1 (p: (s32[], f32[8,8])) -> pred[] {
+  %p = (s32[], f32[8,8]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %n = s32[] constant(10)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+%add.1 (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %s = f32[] add(%a, %b)
+}
+ENTRY %main (arg: f32[8,8]) -> f32[8,8] {
+  %arg = f32[8,8] parameter(0)
+  %w = f32[8,8] parameter(1)
+  %d = f32[8,8]{1,0} dot(%arg, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %zero = s32[] constant(0)
+  %t0 = (s32[], f32[8,8]) tuple(%zero, %d)
+  %wh = (s32[], f32[8,8]) while(%t0), condition=%cond.1, body=%body.1
+  ROOT %out = f32[8,8] get-tuple-element(%wh), index=1
+}
+"""
+
+
+def test_while_trip_count_multiplies_collectives():
+    res = analyze_collectives(HLO)
+    # one all-reduce of 256 bytes in a 10-trip loop, group 4:
+    # 2 * 256 * 3/4 * 10 = 3840
+    assert abs(res["total_per_device_bytes"] - 3840.0) < 1e-6
+    assert res["n_ops"] == 10
+
+
+def test_dot_flops_counted():
+    res = analyze_cost(HLO)
+    assert res["flops"] == 2 * 8 * 8 * 8  # one 8x8x8 dot

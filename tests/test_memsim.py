@@ -1,0 +1,71 @@
+"""Simulator + compiler invariants, including hypothesis property tests."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.graphs.zoo import resnet50
+from repro.memsim import tiers as T
+from repro.memsim.compiler import compiler_reference, greedy_dp, heuristic_mapping
+from repro.memsim.simulator import (build_sim_graph, evaluate,
+                                    evaluate_population, latency, rectify)
+
+G = resnet50()
+SG = build_sim_graph(G)
+CMAP, CLAT = compiler_reference(G)
+
+
+def test_compiler_map_is_valid():
+    _, eps = rectify(SG, jnp.asarray(CMAP))
+    assert float(eps) == 0.0
+
+
+def test_all_hbm_always_valid():
+    m = jnp.zeros((G.n, 2), jnp.int32)
+    _, eps = rectify(SG, m)
+    assert float(eps) == 0.0  # HBM has room for everything
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_rectified_maps_are_valid_and_slower_or_equal(seed):
+    """Property: rectify() output passes rectify() with eps == 0, and
+    latency is monotone: moving a tensor to a faster tier (when capacity
+    allows) never increases simulated latency."""
+    rng = np.random.default_rng(seed)
+    m = jnp.asarray(rng.integers(0, 3, (G.n, 2)), jnp.int32)
+    rect, eps = rectify(SG, m)
+    rect2, eps2 = rectify(SG, rect)
+    assert float(eps2) == 0.0
+    assert (np.asarray(rect2) == np.asarray(rect)).all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.integers(0, 56))
+def test_latency_monotone_in_bandwidth(seed, node):
+    """Moving one tensor HBM->VMEM (ignoring capacity) cannot raise latency."""
+    rng = np.random.default_rng(seed)
+    m = np.asarray(rng.integers(0, 3, (G.n, 2)), np.int32)
+    m[node, 0] = T.HBM_IDX
+    slow = float(latency(SG, jnp.asarray(m)))
+    m[node, 0] = T.VMEM_IDX
+    fast = float(latency(SG, jnp.asarray(m)))
+    assert fast <= slow + 1e-9
+
+
+def test_reward_sign_contract():
+    """Algorithm 1: valid maps get positive reward, invalid negative."""
+    maps = jax.random.randint(jax.random.PRNGKey(0), (32, G.n, 2), 0, 3)
+    res = evaluate_population(SG, maps, jnp.float32(CLAT))
+    r = np.asarray(res["reward"])
+    v = np.asarray(res["valid"])
+    assert (r[v] > 0).all()
+    assert (r[~v] <= 0).all()
+
+
+def test_greedy_dp_beats_all_hbm():
+    m, _ = greedy_dp(G, passes=1)
+    res = evaluate(SG, jnp.asarray(m), jnp.float32(CLAT))
+    all_hbm = evaluate(SG, jnp.zeros((G.n, 2), jnp.int32), jnp.float32(CLAT))
+    assert float(res["reward"]) >= float(all_hbm["reward"])

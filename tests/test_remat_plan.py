@@ -1,0 +1,12 @@
+"""Placement plan -> training knobs consumption."""
+from repro.configs.registry import get_config
+from repro.training.remat import apply_plan
+
+
+def test_apply_plan_sets_remat_and_blocking():
+    plan = {"derived": {"act_resident_frac": 0.1, "suggested_remat": "full"}}
+    cfg = apply_plan(get_config("granite-3-8b").replace(scan_block=0), plan)
+    assert cfg.remat == "full" and cfg.scan_block > 1
+    plan2 = {"derived": {"act_resident_frac": 0.9, "suggested_remat": "none"}}
+    cfg2 = apply_plan(get_config("granite-3-8b"), plan2)
+    assert cfg2.remat == "none"

@@ -1,0 +1,57 @@
+"""Every (arch x shape) plan must produce divisible shardings on both
+production meshes — the static guarantee behind the 64/64 dry-run."""
+import pytest
+
+from repro.configs.base import SHAPES, supports_shape
+from repro.configs.registry import ARCH_IDS, get_config
+from repro.distributed.rules import make_plan
+from repro.models.zoo import get_model
+from repro.utils.params import validate_divisibility
+
+
+class _FakeMesh:
+    """Static stand-in (tests keep 1 real device)."""
+    def __init__(self, shape, names):
+        import numpy as np
+        self.axis_names = names
+        self.devices = np.zeros(shape)
+
+
+MESHES = [((16, 16), ("data", "model")),
+          ((2, 16, 16), ("pod", "data", "model"))]
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("mesh_shape,axes", MESHES)
+def test_param_shardings_divide(arch, mesh_shape, axes):
+    cfg = get_config(arch)
+    mesh = _FakeMesh(mesh_shape, axes)
+    sizes = dict(zip(axes, mesh_shape))
+    for shape in SHAPES.values():
+        ok, _ = supports_shape(cfg, shape)
+        if not ok:
+            continue
+        plan = make_plan(cfg, mesh, shape)
+        model = get_model(cfg, None)
+        problems = validate_divisibility(model.param_defs(), plan.rules, sizes)
+        assert not problems, (arch, shape.name, problems[:3])
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_batch_axes_divide_global_batch(arch):
+    cfg = get_config(arch)
+    for mesh_shape, axes in MESHES:
+        mesh = _FakeMesh(mesh_shape, axes)
+        sizes = dict(zip(axes, mesh_shape))
+        for shape in SHAPES.values():
+            ok, _ = supports_shape(cfg, shape)
+            if not ok:
+                continue
+            plan = make_plan(cfg, mesh, shape)
+            if plan.batch_axes:
+                ax = ((plan.batch_axes,) if isinstance(plan.batch_axes, str)
+                      else plan.batch_axes)
+                n = 1
+                for a in ax:
+                    n *= sizes[a]
+                assert shape.global_batch % n == 0
