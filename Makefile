@@ -1,0 +1,12 @@
+# Convenience targets; see ROADMAP.md for the tier-1 verify command.
+.PHONY: test smoke bench
+
+test:
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python -m pytest -x -q
+
+# fast suite + 30s inner-loop bench sanity (what CI should run per push)
+smoke:
+	bash benchmarks/smoke.sh
+
+bench:
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python benchmarks/run.py

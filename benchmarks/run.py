@@ -1,10 +1,17 @@
-"""Benchmark harness entry: one function per paper table/figure.
-Prints ``name,value,derived`` CSV. BENCH_STEPS / BENCH_SEEDS env vars
-control the budget (defaults keep a full run ~20-30 min on this CPU
-container; the full-budget numbers in EXPERIMENTS.md come from the
-background runs under experiments/)."""
+"""Benchmark harness entry: one function per paper table/figure, plus the
+inner-loop microbenchmarks gating perf PRs.  Prints ``name,value,derived``
+CSV.  BENCH_STEPS / BENCH_SEEDS env vars control the budget (defaults
+keep a full run ~20-30 min on this CPU container; the full-budget numbers
+in EXPERIMENTS.md come from the background runs under experiments/).
+
+Select benches by name: ``python benchmarks/run.py [simulator rectify
+generation fig4 ...]`` (no args = all).  ``rectify`` + ``generation``
+also write machine-readable numbers to BENCH_inner_loop.json next to
+this file, so the perf trajectory of the EGRL inner loop is tracked
+across PRs."""
 from __future__ import annotations
 
+import json
 import os
 import sys
 import time
@@ -13,28 +20,107 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 STEPS = int(os.environ.get("BENCH_STEPS", "800"))
 SEEDS = int(os.environ.get("BENCH_SEEDS", "1"))
+# BENCH_JSON redirects the machine-readable output (smoke runs point it
+# at a temp file so reduced-budget timings never clobber the tracked
+# trajectory numbers)
+_JSON_PATH = os.environ.get("BENCH_JSON", os.path.join(
+    os.path.dirname(os.path.abspath(__file__)), "BENCH_inner_loop.json"))
+
+
+def _update_json(section: str, payload: dict) -> None:
+    data = {}
+    try:
+        with open(_JSON_PATH) as f:
+            data = json.load(f)
+    except (FileNotFoundError, json.JSONDecodeError):
+        pass   # first run, or a truncated file from an interrupted one
+    data[section] = payload
+    tmp = _JSON_PATH + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(data, f, indent=2, sort_keys=True)
+        f.write("\n")
+    os.replace(tmp, _JSON_PATH)   # atomic: no torn writes on Ctrl-C
+
+
+def _time_evaluate(g, pop: int, reps: int) -> float:
+    """us/rollout of the vmapped pop-evaluation on graph g (warm cache)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.memsim.simulator import build_sim_graph, evaluate_population
+    from repro.memsim.compiler import compiler_reference
+
+    sg = build_sim_graph(g)
+    _, ref = compiler_reference(g)
+    maps = jax.random.randint(jax.random.PRNGKey(0), (pop, g.n, 2), 0, 3)
+    r = evaluate_population(sg, maps, jnp.float32(ref))
+    jax.block_until_ready(r["reward"])
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        r = evaluate_population(sg, maps, jnp.float32(ref))
+        jax.block_until_ready(r["reward"])
+    return (time.perf_counter() - t0) / reps / pop * 1e6
 
 
 def bench_simulator() -> None:
     """Microbenchmark: vmapped population evaluation (the inner loop)."""
-    import jax
-    import jax.numpy as jnp
     from repro.graphs.zoo import resnet50, bert
-    from repro.memsim.simulator import build_sim_graph, evaluate_population
-    from repro.memsim.compiler import compiler_reference
 
     for g in (resnet50(), bert()):
-        sg = build_sim_graph(g)
-        _, ref = compiler_reference(g)
-        maps = jax.random.randint(jax.random.PRNGKey(0), (64, g.n, 2), 0, 3)
-        r = evaluate_population(sg, maps, jnp.float32(ref))
-        jax.block_until_ready(r["reward"])
-        t0 = time.perf_counter()
-        for _ in range(5):
-            r = evaluate_population(sg, maps, jnp.float32(ref))
-            jax.block_until_ready(r["reward"])
-        us = (time.perf_counter() - t0) / 5 / 64 * 1e6
+        us = _time_evaluate(g, pop=64, reps=5)
         print(f"simulator_rollout_{g.name},{us:.1f},us_per_rollout_pop64")
+
+
+def bench_rectify() -> None:
+    """Inner-loop gate: vmapped rectify+latency+reward per rollout, and
+    rectify in isolation, on every zoo graph.  Writes
+    BENCH_inner_loop.json (us_per_rollout at pop 64)."""
+    import jax
+    from repro.graphs.zoo import resnet50, resnet101, bert
+    from repro.memsim.simulator import build_sim_graph, rectify
+
+    pop, reps = 64, 20
+    payload = {"pop": pop}
+    for g in (resnet50(), resnet101(), bert()):
+        sg = build_sim_graph(g)
+        us_eval = _time_evaluate(g, pop=pop, reps=reps)
+        maps = jax.random.randint(jax.random.PRNGKey(0), (pop, g.n, 2), 0, 3)
+        rect = jax.jit(jax.vmap(lambda m: rectify(sg, m)))
+        jax.block_until_ready(rect(maps))
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            jax.block_until_ready(rect(maps))
+        us_rect = (time.perf_counter() - t0) / reps / pop * 1e6
+
+        print(f"rectify_{g.name},{us_rect:.1f},us_per_rollout_pop{pop}")
+        print(f"evaluate_{g.name},{us_eval:.1f},us_per_rollout_pop{pop}")
+        payload[g.name] = {"rectify_us_per_rollout": round(us_rect, 2),
+                           "evaluate_us_per_rollout": round(us_eval, 2)}
+    _update_json("rectify", payload)
+
+
+def bench_generation() -> None:
+    """Inner-loop gate: ms per EGRL generation (pop 20), EA-only (the
+    device-resident EA path) and full EGRL (adds SAC updates)."""
+    from repro.core.egrl import EGRL, EGRLConfig
+    from repro.graphs.zoo import resnet50, bert
+
+    reps = max(3, min(10, STEPS // 80))
+    payload = {"pop": 20}
+    for gf in (resnet50, bert):
+        g = gf()
+        row = {}
+        for mode in ("ea", "egrl"):
+            algo = EGRL(g, EGRLConfig(seed=0), mode=mode)
+            for _ in range(2):
+                algo.generation()          # compile + warmup
+            t0 = time.perf_counter()
+            for _ in range(reps):
+                algo.generation()
+            ms = (time.perf_counter() - t0) / reps * 1e3
+            print(f"generation_{mode}_{g.name},{ms:.1f},ms_per_generation")
+            row[f"{mode}_ms_per_generation"] = round(ms, 2)
+        payload[g.name] = row
+    _update_json("generation", payload)
 
 
 def bench_fig4() -> None:
@@ -75,16 +161,34 @@ def bench_roofline() -> None:
                   f"{r['roofline_fraction']:.3f},dominant={r['dominant']}")
 
 
-def main() -> None:
+BENCHES = {
+    "simulator": bench_simulator,
+    "rectify": bench_rectify,
+    "generation": bench_generation,
+    "fig4": bench_fig4,
+    "fig5": bench_fig5,
+    "fig7": bench_fig7,
+    "arch_placement": bench_arch_placement,
+    "roofline": bench_roofline,
+}
+# "inner_loop" = the fast microbenchmark pair used by benchmarks/smoke.sh
+GROUPS = {"inner_loop": ("rectify", "generation")}
+
+
+def main(argv=None) -> None:
     sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+    argv = sys.argv[1:] if argv is None else argv
+    names = []
+    for a in argv:
+        names += list(GROUPS.get(a, (a,)))
+    unknown = [n for n in names if n not in BENCHES]
+    if unknown:
+        sys.exit(f"unknown bench(es) {unknown}; "
+                 f"choose from {sorted(BENCHES) + sorted(GROUPS)}")
     t0 = time.time()
     print("name,value,derived")
-    bench_simulator()
-    bench_fig4()
-    bench_fig5()
-    bench_fig7()
-    bench_arch_placement()
-    bench_roofline()
+    for name in (names or list(BENCHES)):
+        BENCHES[name]()
     print(f"total_wall_s,{time.time() - t0:.0f},")
 
 

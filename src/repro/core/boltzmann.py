@@ -44,3 +44,31 @@ def sample(key, b: Boltzmann) -> jnp.ndarray:
 
 def greedy(b: Boltzmann) -> jnp.ndarray:
     return jnp.argmax(b.prior, axis=-1).astype(jnp.int32)
+
+
+# ---------------------------------------------------------- flat encoding
+# The device-resident EA (core/ea.py) stores a whole Boltzmann
+# sub-population as one (P, flat_size) array so crossover/mutation are
+# plain vectorized ops over stacked genomes.
+
+def prior_size(n_nodes: int) -> int:
+    return n_nodes * 2 * 3
+
+
+def flat_size(n_nodes: int) -> int:
+    return prior_size(n_nodes) + n_nodes * 2
+
+
+def to_flat(prior: jnp.ndarray, log_t: jnp.ndarray) -> jnp.ndarray:
+    """(..., N, 2, 3) + (..., N, 2) -> (..., flat_size)."""
+    lead = prior.shape[:-3]
+    return jnp.concatenate([prior.reshape(lead + (-1,)),
+                            log_t.reshape(lead + (-1,))], axis=-1)
+
+
+def from_flat(vec: jnp.ndarray, n_nodes: int) -> Boltzmann:
+    """(..., flat_size) -> Boltzmann with (..., N, 2, 3) / (..., N, 2)."""
+    lead = vec.shape[:-1]
+    n_p = prior_size(n_nodes)
+    return Boltzmann(vec[..., :n_p].reshape(lead + (n_nodes, 2, 3)),
+                     vec[..., n_p:].reshape(lead + (n_nodes, 2)))

@@ -1,78 +1,160 @@
-"""Evolutionary operators over the mixed population (Algorithm 2):
-tournament selection with replacement, single-point crossover within an
-encoding type, GNN->Boltzmann prior seeding across types, Gaussian
-mutation with elite shielding."""
+"""Evolutionary operators over the mixed population (Algorithm 2),
+device-resident: genomes live as stacked (P, ...) arrays and one jitted
+``evolve`` call runs tournament selection, single-point crossover,
+GNN->Boltzmann prior seeding, and Gaussian mutation for a whole
+generation — no per-child Python loop, no host<->device ping-pong.
+
+Fixed encoding slots (deviation from the seed's list-of-Individuals
+implementation): the population holds ``n_g`` GNN genomes and ``n_b``
+Boltzmann genomes whose counts never change.  Tournament selection runs
+within each encoding; elites are split proportionally.  The paper's
+cross-type information pathway (Figure 2 / Alg 2 lines 16-18) is kept:
+a Boltzmann child that draws a GNN elite as its crossover mate is
+re-seeded from that elite's posterior logits.  The seed code instead let
+children change encoding (a GNN x Boltzmann cross produced a Boltzmann
+child, drifting the mix over time); fixed slots pin the mix at
+``boltzmann_frac`` so every array keeps a static shape and the whole
+step stays inside one XLA program.
+
+Boltzmann genomes travel through the EA as flat vectors
+(see repro.core.boltzmann.to_flat / from_flat); the prior block and the
+log-temperature block get their own mutation scales, matching the seed
+operators.
+"""
 from __future__ import annotations
 
-import dataclasses
-from typing import List, Optional, Union
-
-import numpy as np
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.boltzmann import Boltzmann
+from repro.core import boltzmann as bz
 
 
-@dataclasses.dataclass
-class Individual:
-    kind: str                       # "gnn" | "boltz"
-    genome: Union[np.ndarray, Boltzmann]
-    fitness: float = -np.inf
-
-    def copy(self) -> "Individual":
-        if self.kind == "gnn":
-            return Individual("gnn", self.genome.copy(), self.fitness)
-        return Individual("boltz", Boltzmann(np.array(self.genome.prior),
-                                             np.array(self.genome.log_t)),
-                          self.fitness)
+def tournament_indices(key, fitness: jnp.ndarray, n_picks: int,
+                       k: int) -> jnp.ndarray:
+    """(n_picks,) winner indices; each pick is the argmax-fitness of k
+    uniform draws with replacement (Alg 2 tournament selection)."""
+    cands = jax.random.randint(key, (n_picks, k), 0, fitness.shape[0])
+    return cands[jnp.arange(n_picks), jnp.argmax(fitness[cands], axis=1)]
 
 
-def tournament(pop: List[Individual], rng, k: int = 3) -> Individual:
-    picks = rng.integers(0, len(pop), size=k)
-    best = max(picks, key=lambda i: pop[i].fitness)
-    return pop[best]
+def single_point_crossover(key, mate: jnp.ndarray,
+                           child: jnp.ndarray) -> jnp.ndarray:
+    """concat(mate[:pt], child[pt:]) for a uniform pt in [1, V)."""
+    v = mate.shape[-1]
+    pt = jax.random.randint(key, (), 1, v)
+    return jnp.where(jnp.arange(v) < pt, mate, child)
 
 
-def crossover_flat(a: np.ndarray, b: np.ndarray, rng) -> np.ndarray:
-    pt = rng.integers(1, len(a))
-    return np.concatenate([a[:pt], b[pt:]])
+def mutate_gnn(key, genome: jnp.ndarray, *, frac: float, std: float,
+               super_prob: float = 0.05) -> jnp.ndarray:
+    """Per-gene Gaussian noise scaled by |g|+0.05 on a `frac` subset;
+    whole-genome super-mutation (10x std) with prob `super_prob`."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    sd = jnp.where(jax.random.uniform(k1) < super_prob, std * 10.0, std)
+    mask = jax.random.uniform(k2, genome.shape) < frac
+    noise = jax.random.normal(k3, genome.shape) * sd * (jnp.abs(genome) + 0.05)
+    return genome + noise * mask
 
 
-def crossover(pa: Individual, pb: Individual, rng,
-              seed_fn=None) -> Individual:
-    """Same-type: single-point crossover. Cross-type (Alg 2 l.16-18): child
-    is a Boltzmann whose prior is seeded from the GNN parent's posterior
-    (seed_fn maps gnn genome -> Boltzmann)."""
-    if pa.kind == pb.kind == "gnn":
-        return Individual("gnn", crossover_flat(pa.genome, pb.genome, rng))
-    if pa.kind == pb.kind == "boltz":
-        fa = np.concatenate([np.asarray(pa.genome.prior).ravel(),
-                             np.asarray(pa.genome.log_t).ravel()])
-        fb = np.concatenate([np.asarray(pb.genome.prior).ravel(),
-                             np.asarray(pb.genome.log_t).ravel()])
-        f = crossover_flat(fa, fb, rng)
-        n = pa.genome.prior.size
-        return Individual("boltz", Boltzmann(
-            f[:n].reshape(pa.genome.prior.shape),
-            f[n:].reshape(pa.genome.log_t.shape)))
-    gnn_parent = pa if pa.kind == "gnn" else pb
-    assert seed_fn is not None
-    return Individual("boltz", seed_fn(gnn_parent.genome))
+def mutate_boltz(key, flat: jnp.ndarray, *, n_nodes: int,
+                 frac: float) -> jnp.ndarray:
+    """Seed operators on the flat encoding: prior noise 0.3, log_t noise
+    0.2, both on a `3*frac` subset; log_t clipped to [-3, 2]."""
+    n_prior = bz.prior_size(n_nodes)
+    kp, kt, mp, mt = jax.random.split(key, 4)
+    prior, log_t = flat[:n_prior], flat[n_prior:]
+    prior = prior + (jax.random.normal(kp, prior.shape) * 0.3
+                     * (jax.random.uniform(mp, prior.shape) < frac * 3))
+    log_t = log_t + (jax.random.normal(kt, log_t.shape) * 0.2
+                     * (jax.random.uniform(mt, log_t.shape) < frac * 3))
+    return jnp.concatenate([prior, jnp.clip(log_t, -3.0, 2.0)])
 
 
-def mutate(ind: Individual, rng, *, frac: float = 0.1, std: float = 0.1,
-           super_prob: float = 0.05) -> Individual:
-    if ind.kind == "gnn":
-        g = ind.genome.copy()
-        n = len(g)
-        sd = std * 10 if rng.random() < super_prob else std
-        idx = rng.random(n) < frac
-        g[idx] += rng.normal(0, sd, idx.sum()) * (np.abs(g[idx]) + 0.05)
-        return Individual("gnn", g)
-    p = np.array(ind.genome.prior)
-    t = np.array(ind.genome.log_t)
-    p += rng.normal(0, 0.3, p.shape) * (rng.random(p.shape) < frac * 3)
-    t += rng.normal(0, 0.2, t.shape) * (rng.random(t.shape) < frac * 3)
-    return Individual("boltz", Boltzmann(p, np.clip(t, -3.0, 2.0)))
+def _gated(gate_key, prob, transformed, original):
+    """Apply `transformed` per-row with probability `prob`."""
+    gate = jax.random.uniform(gate_key, (original.shape[0],)) < prob
+    return jnp.where(gate[:, None], transformed, original)
+
+
+def evolve(key, gnn_pop, fit_g, bz_pop, fit_b, gnn_logits, *,
+           n_nodes: int, e_g: int, e_b: int, tournament_k: int,
+           crossover_prob: float, mut_prob: float, mut_frac: float,
+           mut_std: float) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One EA generation, entirely on device.
+
+    gnn_pop (n_g, V) flat GNN params; bz_pop (n_b, F) flat Boltzmann
+    genomes; fit_* their fitnesses; gnn_logits (n_g, N, 2, 3) this
+    generation's GNN posteriors (for cross-type seeding).  Returns the
+    next (gnn_pop, bz_pop) with elites in the leading rows, sorted by
+    fitness (row 0 = best).
+    """
+    n_g, n_b = gnn_pop.shape[0], bz_pop.shape[0]
+    keys = jax.random.split(key, 12)
+    # one fitness ranking shared by elite retention AND cross-type
+    # seeding, so elite rows and elite_logits can never desynchronize
+    order_g = jnp.argsort(-fit_g) if n_g else None
+
+    # ---- GNN slots: elites + tournament/crossover/mutation children
+    new_g = gnn_pop
+    if n_g:
+        elites = gnn_pop[order_g[:e_g]]                      # (e_g, V)
+        n_child = n_g - e_g
+        if n_child:
+            parents = gnn_pop[
+                tournament_indices(keys[0], fit_g, n_child, tournament_k)]
+            mates = elites[jax.random.randint(keys[1], (n_child,), 0, e_g)]
+            crossed = jax.vmap(single_point_crossover)(
+                jax.random.split(keys[2], n_child), mates, parents)
+            children = _gated(keys[3], crossover_prob, crossed, parents)
+            mutated = jax.vmap(lambda k, g: mutate_gnn(
+                k, g, frac=mut_frac, std=mut_std))(
+                jax.random.split(keys[4], n_child), children)
+            children = _gated(keys[5], mut_prob, mutated, children)
+            new_g = jnp.concatenate([elites, children])
+        else:
+            new_g = elites
+
+    # ---- Boltzmann slots: mates drawn from the global elite pool; a GNN
+    # mate re-seeds the child from its posterior (Alg 2 lines 16-18)
+    new_b = bz_pop
+    if n_b:
+        order_b = jnp.argsort(-fit_b)
+        elites_b = bz_pop[order_b[:e_b]] if e_b else bz_pop[:0]
+        n_child = n_b - e_b
+        if n_child:
+            parents = bz_pop[
+                tournament_indices(keys[6], fit_b, n_child, tournament_k)]
+            n_elite_pool = e_g + e_b if (n_g and e_g) else e_b
+            children = parents
+            if n_elite_pool:
+                mate_idx = jax.random.randint(
+                    keys[7], (n_child,), 0, n_elite_pool)
+                ck = jax.random.split(keys[8], n_child)
+                if n_g and e_g:
+                    elite_logits = gnn_logits[order_g[:e_g]]  # (e_g, N, 2, 3)
+
+                    def cross_one(k, mi, child):
+                        ks, kc = jax.random.split(k)
+                        seeded = bz.to_flat(*bz.seed_from_logits(
+                            elite_logits[jnp.clip(mi, 0, e_g - 1)], ks))
+                        bz_mate = (elites_b[jnp.clip(mi - e_g, 0, max(e_b - 1, 0))]
+                                   if e_b else child)
+                        crossed = single_point_crossover(kc, bz_mate, child)
+                        return jnp.where(mi < e_g, seeded, crossed)
+                else:
+                    def cross_one(k, mi, child):
+                        return single_point_crossover(k, elites_b[mi], child)
+                crossed = jax.vmap(cross_one)(ck, mate_idx, parents)
+                children = _gated(keys[9], crossover_prob, crossed, parents)
+            mutated = jax.vmap(lambda k, g: mutate_boltz(
+                k, g, n_nodes=n_nodes, frac=mut_frac))(
+                jax.random.split(keys[10], n_child), children)
+            children = _gated(keys[11], mut_prob, mutated, children)
+            new_b = (jnp.concatenate([elites_b, children])
+                     if e_b else children)
+        else:
+            new_b = elites_b
+
+    return new_g, new_b

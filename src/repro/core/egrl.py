@@ -2,12 +2,23 @@
 SAC learner sharing one replay buffer, with PG->EA migration and
 GNN->Boltzmann prior seeding.
 
-JAX-native beyond-paper optimization: every generation, ALL GNN
-individuals' forward passes run as one vmapped call over stacked flat
-parameter vectors, all Boltzmann samples as another, and the whole
-population's mappings are scored by ONE vmapped simulator call — a
-generation is three device calls, vs. the paper's serial
-hardware-in-the-loop rollouts.
+Device-resident generation (beyond-paper optimization): the population
+is stored as stacked arrays — GNN genomes as one (n_g, V) flat-parameter
+matrix, Boltzmann genomes as one (n_b, F) flat matrix — and a generation
+is a handful of jitted device calls:
+
+1. ONE vmapped GNN forward over the stacked parameter matrix,
+2. ONE vmapped Boltzmann sample (+ one batched PG rollout sample),
+3. ONE vmapped simulator call scoring every mapping (memsim.simulator),
+4. ONE jitted EA step (core/ea.py: tournament, crossover, seeding,
+   mutation over the stacked genomes) plus an in-place migration row
+   write for the PG policy.
+
+The only host<->device traffic per generation is the single sync that
+pulls (mappings, rewards) out for the replay buffer, best-mapping
+tracking and logging.  The seed implementation instead kept a Python
+list of per-individual genomes: building each child ran 1-3 host RNG
+ops plus device transfers, serializing the inner loop.
 
 Modes: "egrl" (full), "ea" (ablate PG), "pg" (ablate EA) — the paper's
 baseline agents.
@@ -15,7 +26,7 @@ baseline agents.
 from __future__ import annotations
 
 import dataclasses
-import time
+from functools import partial
 from typing import Dict, List, Optional
 
 import numpy as np
@@ -58,7 +69,6 @@ class EGRL:
         self.g = graph
         self.cfg = cfg
         self.mode = mode
-        self.rng = np.random.default_rng(cfg.seed)
         self.key = jax.random.PRNGKey(cfg.seed)
 
         self.feats = jnp.asarray(graph.features())
@@ -71,7 +81,27 @@ class EGRL:
         self.buffer = ReplayBuffer(graph.n, seed=cfg.seed)
         self._template = self.learner.actor
 
-        # vmapped population programs
+        # ---- stacked populations (fixed encoding slots, see core/ea.py)
+        if mode == "pg":
+            self.n_g = self.n_b = 0
+        else:
+            self.n_b = max(1, int(round(cfg.pop_size * cfg.boltzmann_frac)))
+            self.n_g = cfg.pop_size - self.n_b
+        self.e_g = min(self.n_g, max(1, round(
+            cfg.elites * self.n_g / max(cfg.pop_size, 1)))) if self.n_g else 0
+        self.e_b = min(self.n_b, max(0, cfg.elites - self.e_g))
+
+        vec0 = gnn.flatten_params(self._template)
+        self.gnn_pop = (jnp.stack([
+            gnn.flatten_params(gnn.init_gnn(self._k(), self.feats.shape[1]))
+            for _ in range(self.n_g)]) if self.n_g
+            else jnp.zeros((0, vec0.shape[0])))
+        self.bz_pop = (jnp.stack([
+            bz.to_flat(*bz.init_boltzmann(self._k(), graph.n))
+            for _ in range(self.n_b)]) if self.n_b
+            else jnp.zeros((0, bz.flat_size(graph.n))))
+
+        # ---- vmapped population programs
         feats, adj = self.feats, self.adj
 
         def gnn_logits_from_vec(vec):
@@ -81,21 +111,13 @@ class EGRL:
         self._pop_gnn_logits = jax.jit(jax.vmap(gnn_logits_from_vec))
         self._pop_sample = jax.jit(
             jax.vmap(lambda k, lg: gnn.sample_actions(k, lg)))
-        self._pop_boltz = jax.jit(
-            jax.vmap(lambda k, p, t: bz.sample(k, bz.Boltzmann(p, t))))
-
-        if mode == "pg":
-            self.pop: List[ea_mod.Individual] = []
-        else:
-            n_b = max(1, int(round(cfg.pop_size * cfg.boltzmann_frac)))
-            n_g = cfg.pop_size - n_b
-            self.pop = [ea_mod.Individual(
-                "gnn", np.asarray(gnn.flatten_params(
-                    gnn.init_gnn(self._k(), self.feats.shape[1]))))
-                for _ in range(n_g)]
-            self.pop += [ea_mod.Individual(
-                "boltz", bz.init_boltzmann(self._k(), graph.n))
-                for _ in range(n_b)]
+        self._pop_boltz = jax.jit(jax.vmap(
+            lambda k, f: bz.sample(k, bz.from_flat(f, graph.n))))
+        self._evolve = jax.jit(partial(
+            ea_mod.evolve, n_nodes=graph.n, e_g=self.e_g, e_b=self.e_b,
+            tournament_k=cfg.tournament_k, crossover_prob=cfg.crossover_prob,
+            mut_prob=cfg.mut_prob, mut_frac=cfg.mut_frac,
+            mut_std=cfg.mut_std))
 
         self.steps = 0
         self.best_reward = -np.inf
@@ -107,87 +129,59 @@ class EGRL:
         self.key, k = jax.random.split(self.key)
         return k
 
-    def _seed_fn(self, vec):
-        logits = self._pop_gnn_logits(jnp.asarray(vec)[None])[0]
-        return bz.seed_from_logits(np.asarray(logits), self._k())
-
-    def _population_actions(self) -> np.ndarray:
-        """All individuals' sampled mappings, batched by encoding type."""
-        acts = np.zeros((len(self.pop), self.g.n, 2), np.int32)
-        g_idx = [i for i, d in enumerate(self.pop) if d.kind == "gnn"]
-        b_idx = [i for i, d in enumerate(self.pop) if d.kind == "boltz"]
-        if g_idx:
-            vecs = jnp.stack([jnp.asarray(self.pop[i].genome) for i in g_idx])
-            logits = self._pop_gnn_logits(vecs)
-            keys = jax.random.split(self._k(), len(g_idx))
-            acts_g = np.asarray(self._pop_sample(keys, logits))
-            for j, i in enumerate(g_idx):
-                acts[i] = acts_g[j]
-        if b_idx:
-            ps = jnp.stack([jnp.asarray(self.pop[i].genome.prior) for i in b_idx])
-            ts = jnp.stack([jnp.asarray(self.pop[i].genome.log_t) for i in b_idx])
-            keys = jax.random.split(self._k(), len(b_idx))
-            acts_b = np.asarray(self._pop_boltz(keys, ps, ts))
-            for j, i in enumerate(b_idx):
-                acts[i] = acts_b[j]
-        return acts
-
-    def _evaluate(self, mappings: np.ndarray):
-        res = evaluate_population(self.sg, jnp.asarray(mappings),
-                                  self.ref_latency, self.cfg.reward_scale)
-        return {k: np.asarray(v) for k, v in res.items()}
-
     # --------------------------------------------------------- generation
     def generation(self) -> Dict:
         cfg = self.cfg
-        maps = []
-        if self.pop:
-            maps.append(self._population_actions())
-        if self.mode != "ea":
-            pg_actions = np.stack([self.learner.explore_action()
-                                   for _ in range(cfg.pg_rollouts)])
-            maps.append(pg_actions)
-        all_maps = np.concatenate(maps, axis=0)
-        res = self._evaluate(all_maps)
-        rewards = res["reward"]
-        self.steps += len(all_maps)
-        self.buffer.add_batch(all_maps, rewards)
+        n_g, n_b = self.n_g, self.n_b
 
-        n_pop = len(self.pop)
-        for i in range(n_pop):
-            self.pop[i].fitness = float(rewards[i])
+        # ---- rollouts: stacked device calls, nothing leaves the device
+        parts = []
+        logits_g = None
+        if n_g:
+            logits_g = self._pop_gnn_logits(self.gnn_pop)
+            parts.append(self._pop_sample(
+                jax.random.split(self._k(), n_g), logits_g))
+        if n_b:
+            parts.append(self._pop_boltz(
+                jax.random.split(self._k(), n_b), self.bz_pop))
+        if self.mode != "ea":
+            parts.append(self.learner.explore_actions(cfg.pg_rollouts))
+        all_maps = jnp.concatenate(parts, axis=0)
+        res = evaluate_population(self.sg, all_maps, self.ref_latency,
+                                  cfg.reward_scale)
+        rewards_dev = res["reward"]
+
+        # ---- EA step (Algorithm 2 lines 8-25), still on device
+        if n_g or n_b:
+            self.gnn_pop, self.bz_pop = self._evolve(
+                self._k(), self.gnn_pop, rewards_dev[:n_g],
+                self.bz_pop, rewards_dev[n_g:n_g + n_b],
+                logits_g if logits_g is not None
+                else jnp.zeros((0, self.g.n, 2, 3)))
+
+        # ---- the ONE host sync per generation: buffer + logging
+        rewards = np.asarray(rewards_dev)
+        maps_np = np.asarray(all_maps)
+        valid = np.asarray(res["valid"])
+        self.steps += len(maps_np)
+        self.buffer.add_batch(maps_np, rewards)
         gen_best = int(np.argmax(rewards))
         if rewards[gen_best] > self.best_reward:
             self.best_reward = float(rewards[gen_best])
-            self.best_mapping = all_maps[gen_best].copy()
-
-        # ---- EA step (Algorithm 2 lines 8-25)
-        if self.pop:
-            order = np.argsort([-d.fitness for d in self.pop])
-            ranked = [self.pop[i] for i in order]
-            elites = [d.copy() for d in ranked[:cfg.elites]]
-            new_pop = list(elites)
-            while len(new_pop) < cfg.pop_size:
-                child = ea_mod.tournament(ranked, self.rng, cfg.tournament_k).copy()
-                if self.rng.random() < cfg.crossover_prob:
-                    mate = elites[self.rng.integers(len(elites))]
-                    child = ea_mod.crossover(mate, child, self.rng,
-                                             seed_fn=self._seed_fn)
-                if self.rng.random() < cfg.mut_prob:
-                    child = ea_mod.mutate(child, self.rng, frac=cfg.mut_frac,
-                                          std=cfg.mut_std)
-                new_pop.append(child)
-            self.pop = new_pop
+            self.best_mapping = maps_np[gen_best].copy()
 
         # ---- PG updates: one gradient step per env step this generation
         info = {}
         if self.mode != "ea":
-            info = self.learner.update(self.buffer, len(all_maps))
-            # ---- migration: PG weights into the weakest individual
-            if self.mode == "egrl" and self.pop:
-                weakest = int(np.argmin([d.fitness for d in self.pop]))
-                self.pop[weakest] = ea_mod.Individual(
-                    "gnn", np.asarray(gnn.flatten_params(self.learner.actor)))
+            info = self.learner.update(self.buffer, len(maps_np))
+            # ---- migration: PG weights into the last GNN slot, the
+            # lowest-ranked child (Algorithm 2's replace-weakest: in the
+            # seed code fresh children carried -inf fitness, so argmin
+            # always picked a child, never an elite).  When every GNN
+            # slot is an elite (n_g == e_g) skip, preserving elitism.
+            if self.mode == "egrl" and n_g > self.e_g:
+                self.gnn_pop = self.gnn_pop.at[n_g - 1].set(
+                    gnn.flatten_params(self.learner.actor))
 
         rec = {
             "steps": self.steps,
@@ -196,7 +190,7 @@ class EGRL:
             "best_reward": self.best_reward,
             "best_speedup": self.best_reward / cfg.reward_scale
             if self.best_reward > 0 else 0.0,
-            "valid_frac": float(res["valid"].mean()),
+            "valid_frac": float(valid.mean()),
             **info,
         }
         self.history.append(rec)
@@ -214,17 +208,20 @@ class EGRL:
 
     # ----------------------------------------------------- deployment API
     def best_policy_logits(self):
-        """Logits of the top-ranked GNN in the population (deployment)."""
-        gnn_inds = [d for d in self.pop if d.kind == "gnn"]
-        if not gnn_inds and self.mode != "ea":
+        """Logits of the top-ranked policy in the population (deployment):
+        the best GNN, else the SAC actor, else the best Boltzmann prior
+        (Boltzmann-only "ea" ablation — crashed in the seed code)."""
+        if self.n_g:
+            return self._pop_gnn_logits(self.gnn_pop[:1])[0]
+        if self.mode != "ea":
             return self.learner.policy_logits()
-        best = max(gnn_inds, key=lambda d: d.fitness)
-        return self._pop_gnn_logits(jnp.asarray(best.genome)[None])[0]
+        return bz.boltzmann_logits(bz.from_flat(self.bz_pop[0], self.g.n))
 
     def best_gnn_vec(self) -> Optional[np.ndarray]:
-        gnn_inds = [d for d in self.pop if d.kind == "gnn"]
-        if gnn_inds:
-            return max(gnn_inds, key=lambda d: d.fitness).genome
+        """Flat params of the best GNN (row 0 is the top elite after a
+        generation; before any generation, an arbitrary init member)."""
+        if self.n_g:
+            return np.asarray(self.gnn_pop[0])
         return np.asarray(gnn.flatten_params(self.learner.actor))
 
 

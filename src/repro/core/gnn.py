@@ -9,11 +9,26 @@ gUnpool scatters back with skip connections — the U-shape of the paper's
 policy. All functions are shape-static per workload, so population forward
 passes vmap over stacked parameter pytrees (one device call per
 generation, see core/egrl.py).
+
+GAT backends: the attention+aggregate inner op of ``_gat`` has two
+implementations selected by the ``backend`` argument (default: the
+``REPRO_GAT_BACKEND`` env var, default "auto"):
+
+- ``"jnp"``  — dense (N, N, H) score materialization in plain jnp.
+  Differentiable; always available.  The SAC learner pins this backend
+  for its loss functions (pallas_call has no autodiff rule).
+- ``"pallas"`` — the fused VMEM-resident kernel in
+  repro.kernels.gat_mp (scores/mask/softmax/aggregate in one pass, no
+  HBM round-trips).  ``interpret`` mode is auto-selected by platform:
+  compiled on TPU, interpreter elsewhere (slow — for parity testing
+  only, see tests/test_gat_backend.py).
+- ``"auto"`` — "pallas" on TPU, "jnp" otherwise.
 """
 from __future__ import annotations
 
 import math
-from typing import Dict
+import os
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -25,6 +40,17 @@ DEPTH = 4
 HEADS = 4
 N_SUB = 2    # weight / activation sub-actions
 N_TIER = 3
+
+GAT_BACKEND = os.environ.get("REPRO_GAT_BACKEND", "auto")
+
+
+def resolve_backend(backend: Optional[str] = None) -> str:
+    """Resolve a backend request to a concrete one ("jnp" | "pallas")."""
+    b = backend or GAT_BACKEND
+    if b == "auto":
+        b = "pallas" if jax.default_backend() == "tpu" else "jnp"
+    assert b in ("jnp", "pallas"), f"unknown GAT backend {b!r}"
+    return b
 
 
 def _gat_defs(d_in, d_out, heads=HEADS):
@@ -54,7 +80,7 @@ def init_gnn(key, n_features: int):
     return init_params(gnn_defs(n_features), key)
 
 
-def _gat(p, h, adj_mask):
+def _gat(p, h, adj_mask, backend: Optional[str] = None):
     """Multi-head graph attention. h (N,D), adj_mask (N,N) bool."""
     N, D = h.shape
     hd = D // HEADS
@@ -62,10 +88,16 @@ def _gat(p, h, adj_mask):
     zh = z.reshape(N, HEADS, hd)
     e_src = jnp.einsum("nhd,hd->nh", zh, p["a_src"])  # (N, H)
     e_dst = jnp.einsum("nhd,hd->nh", zh, p["a_dst"])
-    e = jax.nn.leaky_relu(e_src[:, None, :] + e_dst[None, :, :], 0.2)  # (N,N,H)
-    e = jnp.where(adj_mask[:, :, None], e, -1e30)
-    alpha = jax.nn.softmax(e, axis=1)                 # attend over neighbors j
-    out = jnp.einsum("njh,jhd->nhd", alpha, zh).reshape(N, D)
+    if resolve_backend(backend) == "pallas":
+        # fused kernel: no dense (N, N, H) attention materialization
+        from repro.kernels.gat_mp.ops import gat_mp
+        out = gat_mp(z, e_src, e_dst, adj_mask.astype(z.dtype), heads=HEADS,
+                     interpret=jax.default_backend() != "tpu")
+    else:
+        e = jax.nn.leaky_relu(e_src[:, None, :] + e_dst[None, :, :], 0.2)
+        e = jnp.where(adj_mask[:, :, None], e, -1e30)  # (N, N, H)
+        alpha = jax.nn.softmax(e, axis=1)             # attend over neighbors j
+        out = jnp.einsum("njh,jhd->nhd", alpha, zh).reshape(N, D)
     return jax.nn.elu(out + p["b"]) + h               # residual
 
 
@@ -84,19 +116,19 @@ def _unpool(h_small, idx, n, h_skip):
     return out + h_skip
 
 
-def gnn_forward(p, feats, adj):
+def gnn_forward(p, feats, adj, backend: Optional[str] = None):
     """feats (N,F), adj (N,N) row-normalized with self loops -> (N,2,3)."""
     N = feats.shape[0]
     mask = adj > 0
     k1, k2 = max(2, N // 2), max(2, N // 4)
     h = jnp.tanh(feats @ p["inp"])
-    h = _gat(p["gat0"], h, mask)                      # level 0
+    h = _gat(p["gat0"], h, mask, backend)             # level 0
     h1, a1, i1 = _pool(p["pool1"], h, adj, k1)        # down 1
-    h1 = _gat(p["gat1"], h1, a1 > 0)
+    h1 = _gat(p["gat1"], h1, a1 > 0, backend)
     h2, a2, i2 = _pool(p["pool2"], h1, a1, k2)        # down 2 (bottleneck)
-    h2 = _gat(p["gat2"], h2, a2 > 0)
+    h2 = _gat(p["gat2"], h2, a2 > 0, backend)
     h1u = _unpool(h2, i2, k1, h1)                     # up 1 (+skip)
-    h1u = _gat(p["gat3"], h1u, a1 > 0)
+    h1u = _gat(p["gat3"], h1u, a1 > 0, backend)
     hu = _unpool(h1u, i1, N, h)                       # up 2 (+skip)
     z = jax.nn.elu(hu @ p["out1"] + p["out_b1"])
     logits = (z @ p["out2"]).reshape(N, N_SUB, N_TIER)

@@ -23,8 +23,18 @@ class ReplayBuffer:
         self.size = min(self.size + 1, self.capacity)
 
     def add_batch(self, actions, rewards):
-        for a, r in zip(actions, rewards):
-            self.add(a, r)
+        """Vectorized ring-buffer insert of a whole generation."""
+        actions = np.asarray(actions, np.int8)
+        rewards = np.asarray(rewards, np.float32)
+        n = len(actions)
+        if n >= self.capacity:
+            actions, rewards = actions[-self.capacity:], rewards[-self.capacity:]
+            n = self.capacity
+        idx = (self.ptr + np.arange(n)) % self.capacity
+        self.actions[idx] = actions
+        self.rewards[idx] = rewards
+        self.ptr = int((self.ptr + n) % self.capacity)
+        self.size = min(self.size + n, self.capacity)
 
     def sample(self, batch: int):
         idx = self.rng.integers(0, self.size, size=batch)

@@ -52,12 +52,15 @@ def critic_defs(n_features: int, hidden: int = gnn.HIDDEN):
 
 
 def critic_forward(p, feats, adj, act_onehot):
-    """act_onehot (N,2,3) float -> (q1, q2) scalars."""
+    """act_onehot (N,2,3) float -> (q1, q2) scalars.
+
+    Pins the "jnp" GAT backend: this runs under jax.grad (pallas_call
+    has no autodiff rule)."""
     mask = adj > 0
     x = jnp.concatenate([feats, act_onehot.reshape(feats.shape[0], 6)], -1)
     h = jnp.tanh(x @ p["inp"])
-    h = gnn._gat(p["gat0"], h, mask)
-    h = gnn._gat(p["gat1"], h, mask)
+    h = gnn._gat(p["gat0"], h, mask, backend="jnp")
+    h = gnn._gat(p["gat1"], h, mask, backend="jnp")
     g = h.mean(axis=0)
     z1 = jax.nn.elu(g @ p["h1"] + p["b1"])
     z2 = jax.nn.elu(g @ p["h2"] + p["b2"])
@@ -104,7 +107,8 @@ class SACLearner:
             return jnp.mean((q1 - rewards) ** 2 + (q2 - rewards) ** 2)
 
         def actor_loss(ap, cp):
-            logits = gnn.gnn_forward(ap, feats_, adj_)
+            # "jnp" backend: differentiated through (see critic_forward)
+            logits = gnn.gnn_forward(ap, feats_, adj_, backend="jnp")
             probs = jax.nn.softmax(logits, axis=-1)
             q1, q2 = critic_forward(cp, feats_, adj_, probs)
             ent = gnn.entropy(logits)
@@ -130,15 +134,23 @@ class SACLearner:
 
         self._update_scan = jax.jit(update_scan)
         self._logits = jax.jit(lambda ap: gnn.gnn_forward(ap, feats_, adj_))
+        self._sample_batch = jax.jit(
+            lambda ap, ks: jax.vmap(
+                lambda k: gnn.sample_actions(k, gnn.gnn_forward(
+                    ap, feats_, adj_)))(ks))
 
     def policy_logits(self, params=None):
         return self._logits(self.actor if params is None else params)
 
     def explore_action(self):
-        """Noisy rollout action for the PG learner's own env step."""
+        """Single rollout action (host copy); see explore_actions."""
+        return np.asarray(self.explore_actions(1)[0])
+
+    def explore_actions(self, n: int) -> jnp.ndarray:
+        """(n, N, 2) rollout actions as ONE jitted device call (the
+        forward pass is shared; only the sampling keys differ)."""
         self.key, k = jax.random.split(self.key)
-        logits = self.policy_logits()
-        return np.asarray(gnn.sample_actions(k, logits))
+        return self._sample_batch(self.actor, jax.random.split(k, n))
 
     def update(self, buffer: ReplayBuffer, steps: int) -> Dict[str, float]:
         cfg = self.cfg

@@ -1,0 +1,61 @@
+"""Plain-numpy oracle for the rectifier — the readable O(N * max_release)
+implementation the jnp ``lax.scan`` version must match bit-for-bit.
+
+Every arithmetic step is done in float32 in the same order as
+``simulator.rectify`` (subtract weight, subtract activation, then add the
+per-tier release sums accumulated over the padded release list), so tier
+decisions AND eps agree exactly, not just within tolerance.  Used by the
+parity tests (tests/test_rectify_parity.py) and as documentation of the
+allocation semantics.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.memsim import tiers as T
+
+
+def rectify_np(sg, mapping: np.ndarray):
+    """mapping (N, 2) int in [0, N_TIERS). Returns (rectified (N,2) int32,
+    eps float32) — same contract as simulator.rectify."""
+    wb_arr = np.asarray(sg.weight_bytes, np.float32)
+    ab_arr = np.asarray(sg.act_bytes, np.float32)
+    release_idx = np.asarray(sg.release_idx)
+    mapping = np.asarray(mapping)
+    n = wb_arr.shape[0]
+
+    free = np.asarray(T.CAPACITIES, np.float32).copy()
+    act_tier = np.zeros(n, np.int32)
+    out = np.zeros((n, 2), np.int32)
+    moved = np.float32(0.0)
+
+    for t in range(n):
+        wt, at = int(mapping[t, 0]), int(mapping[t, 1])
+        wb, ab = wb_arr[t], ab_arr[t]
+        # weights: pinned for the whole run
+        w_tier = wt if free[wt] >= wb else T.HBM_IDX
+        if free[wt] < wb:
+            moved = np.float32(moved + wb)
+        free[w_tier] = np.float32(free[w_tier] - wb)
+        # output activation: lives until last consumer
+        a_tier = at if free[at] >= ab else T.HBM_IDX
+        if free[at] < ab:
+            moved = np.float32(moved + ab)
+        free[a_tier] = np.float32(free[a_tier] - ab)
+        act_tier[t] = a_tier
+        out[t] = (w_tier, a_tier)
+        # release activations whose last consumer is t (t included)
+        per_tier = np.zeros(T.N_TIERS, np.float32)
+        for r in release_idx[t]:
+            contrib = ab_arr[r] if r >= 0 else np.float32(0.0)
+            k = act_tier[r] if r >= 0 else 0
+            for tier in range(T.N_TIERS):
+                per_tier[tier] = np.float32(
+                    per_tier[tier]
+                    + (contrib if tier == k else np.float32(0.0)))
+        free = np.float32(free + per_tier)
+
+    total = np.float32(np.sum(wb_arr, dtype=np.float32)
+                       + np.sum(ab_arr, dtype=np.float32))
+    eps = np.float32(moved / max(total, np.float32(1.0)))
+    return out, eps

@@ -10,9 +10,34 @@ Faithful to Algorithm 1:
 - ``evaluate``: eps > 0  ->  reward = -eps (no "inference" is run);
   eps == 0 ->  reward = speedup vs the reference (compiler) latency.
 
+Complexity: ``rectify`` is O(N * max_release) per mapping.  Instead of a
+dense (N, N) release matrix reduced over all nodes at every step (the
+original O(N^2 * N_TIERS) formulation), ``SimGraph`` precomputes
+``release_idx (N, max_release)`` — for each step t, the (padded) list of
+nodes whose activation dies at t.  Each node has exactly one last
+consumer, so the lists sum to N and ``max_release`` is the graph's max
+release fan-in (~9 for BERT's per-head attention, 2-3 for ResNets).
+
+The jnp scan goes one step further than the index lists: because a
+node's release *time* is static (``last_consumer``), the allocator
+scatters freed bytes forward into a ring buffer of per-tier release
+credits at allocation time, sized by the graph's maximum activation
+lifetime (W = max(last_consumer[t] - t) + 1; 4 for ResNets, 30 for
+BERT).  Each step then (a) pops its own credit row, (b) resolves the two
+tier decisions with one-hot arithmetic (no gathers/scatters with
+dynamic indices anywhere — they dominate runtime in a vmapped CPU
+scan), and (c) pushes the activation's bytes to row
+``last_consumer % W``.  The carry is (free (3,), credit (W, 3),
+moved); the rectified mapping is emitted through the scan's stacked
+outputs rather than scattered into a carried (N, 2) buffer.  The
+accumulation order of every float32 add matches the per-release-list
+reference in ``repro.memsim.reference`` bit for bit (verified by
+tests/test_rectify_parity.py).
+
 Everything is pure jnp over static per-graph arrays, so a whole EA
 population's mappings evaluate in ONE vmapped call — the JAX-native
 replacement for the paper's serial hardware-in-the-loop rollouts.
+A bit-for-bit numpy oracle lives in ``repro.memsim.reference``.
 """
 from __future__ import annotations
 
@@ -36,7 +61,29 @@ class SimGraph(NamedTuple):
     flops: jnp.ndarray             # (N,)
     last_consumer: jnp.ndarray     # (N,) int32
     in_acts: jnp.ndarray           # (N, max_in) int32 producer idx, -1 pad
-    release: jnp.ndarray           # (N, N) bool: release[t, n] = last[n]==t
+    release_idx: jnp.ndarray       # (N, max_release) int32: nodes whose
+    #                                activation is freed after step t; -1 pad
+    # ring-buffer schedule for rectify's release credits (precomputed so
+    # rectify stays traceable: the ring width W lives in ring_init's
+    # SHAPE, which jit treats as static)
+    ring_t: jnp.ndarray            # (N,) int32: t % W
+    ring_lc: jnp.ndarray           # (N,) int32: last_consumer % W
+    self_release: jnp.ndarray      # (N,) float32: 1.0 iff last_consumer==t
+    ring_init: jnp.ndarray         # (W, N_TIERS) float32 zeros
+
+
+def build_release_idx(last_consumer: np.ndarray) -> np.ndarray:
+    """Padded inverse of last_consumer: release_idx[t] lists every node n
+    with last_consumer[n] == t (its activation is freed after step t)."""
+    n = len(last_consumer)
+    released = [[] for _ in range(n)]
+    for node, t in enumerate(last_consumer):
+        released[int(t)].append(node)
+    max_release = max(1, max(len(r) for r in released))
+    out = -np.ones((n, max_release), np.int32)
+    for t, nodes in enumerate(released):
+        out[t, :len(nodes)] = nodes
+    return out
 
 
 def build_sim_graph(g: WorkloadGraph) -> SimGraph:
@@ -48,8 +95,8 @@ def build_sim_graph(g: WorkloadGraph) -> SimGraph:
         for j, p in enumerate(ps):
             in_acts[i, j] = p
     last = arr["last_consumer"].astype(np.int32)
-    release = np.zeros((n, n), bool)
-    release[last, np.arange(n)] = True
+    t_arr = np.arange(n)
+    w = int((last - t_arr).max()) + 1          # max activation lifetime
     return SimGraph(
         jnp.asarray(arr["weight_bytes"], jnp.float32),
         jnp.asarray(arr["weight_frac"], jnp.float32),
@@ -57,50 +104,72 @@ def build_sim_graph(g: WorkloadGraph) -> SimGraph:
         jnp.asarray(arr["flops"], jnp.float32),
         jnp.asarray(last),
         jnp.asarray(in_acts),
-        jnp.asarray(release),
+        jnp.asarray(build_release_idx(last)),
+        jnp.asarray(t_arr % w, jnp.int32),
+        jnp.asarray(last % w, jnp.int32),
+        jnp.asarray((last == t_arr).astype(np.float32)),
+        jnp.zeros((w, T.N_TIERS), jnp.float32),
     )
 
 
 CAP = jnp.asarray(T.CAPACITIES, jnp.float32)
 BW = jnp.asarray(T.BANDWIDTHS, jnp.float32)
+TIER_IDS = jnp.arange(T.N_TIERS, dtype=jnp.int32)
+_HBM_ONEHOT = jnp.zeros(T.N_TIERS, jnp.float32).at[T.HBM_IDX].set(1.0)
+# scan unroll factor: amortizes loop overhead without blowing up the
+# working set (sweeping 1/2/4/8 on this CPU: 2 is best for BERT-sized
+# graphs, within noise of 4 for the ResNets)
+_UNROLL = 2
 
 
 def rectify(sg: SimGraph, mapping: jnp.ndarray):
     """mapping (N, 2) int32 in [0,3): [:,0]=weight tier, [:,1]=act tier.
 
     Returns (rectified mapping, eps) — the compiler pass of Algorithm 1.
-    Sequential topo-order allocation with capacity counters (lax.scan).
+    Sequential topo-order allocation with capacity counters (lax.scan)
+    over a ring buffer of release credits; O(1) work per step beyond the
+    O(W) ring row (see module docstring).
     """
-    n = sg.weight_bytes.shape[0]
+    zrow = jnp.zeros((1, T.N_TIERS), jnp.float32)
 
-    def step(carry, t):
-        free, out_map, moved = carry
-        wt, at = mapping[t, 0], mapping[t, 1]
-        wb, ab = sg.weight_bytes[t], sg.act_bytes[t]
+    def step(carry, xs):
+        free, credit, moved = carry
+        tm, wt, at, wb, ab, lcm, self_rel = xs
+        # pop this step's credit row (freed-bytes contributions from all
+        # earlier producers whose last consumer is t), recycle the slot
+        row = jax.lax.dynamic_slice_in_dim(credit, tm, 1, 0)      # (1, 3)
+        credit = jax.lax.dynamic_update_slice_in_dim(credit, zrow, tm, 0)
         # --- weights: pinned for the whole run
-        w_fits = free[wt] >= wb
+        oh_wt = (TIER_IDS == wt).astype(jnp.float32)
+        w_fits = jnp.sum(free * oh_wt) >= wb
+        oh_w = jnp.where(w_fits, oh_wt, _HBM_ONEHOT)
         w_tier = jnp.where(w_fits, wt, T.HBM_IDX)
         moved = moved + jnp.where(w_fits, 0.0, wb)
-        free = free.at[w_tier].add(-wb)
+        free = free - wb * oh_w
         # --- output activation: lives until last consumer
-        a_fits = free[at] >= ab
+        oh_at = (TIER_IDS == at).astype(jnp.float32)
+        a_fits = jnp.sum(free * oh_at) >= ab
+        oh_a = jnp.where(a_fits, oh_at, _HBM_ONEHOT)
         a_tier = jnp.where(a_fits, at, T.HBM_IDX)
         moved = moved + jnp.where(a_fits, 0.0, ab)
-        free = free.at[a_tier].add(-ab)
-        out_map = out_map.at[t, 0].set(w_tier)
-        out_map = out_map.at[t, 1].set(a_tier)
-        # --- release activations whose last consumer is t
-        rel = sg.release[t]  # (N,) bool
-        per_tier = jnp.stack([
-            jnp.sum(sg.act_bytes * rel * (out_map[:, 1] == k))
-            for k in range(T.N_TIERS)])
-        free = free + per_tier
-        return (free, out_map, moved), None
+        free = free - ab * oh_a
+        # --- push the release credit to ring row last_consumer % W
+        # (self-releasing nodes, last_consumer == t, skip the ring: their
+        # row was already popped this step)
+        fut = (1.0 - self_rel) * ab
+        row_lc = jax.lax.dynamic_slice_in_dim(credit, lcm, 1, 0)
+        credit = jax.lax.dynamic_update_slice_in_dim(
+            credit, row_lc + fut * oh_a[None, :], lcm, 0)
+        # --- release activations whose last consumer is t (t last,
+        # matching the ascending-node accumulation order of the oracle)
+        free = free + (row[0] + self_rel * ab * oh_a)
+        return (free, credit, moved), jnp.stack([w_tier, a_tier])
 
-    free0 = CAP  # HBM treated as its real capacity too
-    map0 = jnp.zeros((n, 2), jnp.int32)
-    (free, out_map, moved), _ = jax.lax.scan(
-        step, (free0, map0, jnp.float32(0.0)), jnp.arange(n))
+    xs = (sg.ring_t, mapping[:, 0], mapping[:, 1],
+          sg.weight_bytes, sg.act_bytes, sg.ring_lc, sg.self_release)
+    carry0 = (CAP, sg.ring_init, jnp.float32(0.0))
+    (free, credit, moved), out_map = jax.lax.scan(
+        step, carry0, xs, unroll=_UNROLL)
     total = jnp.sum(sg.weight_bytes) + jnp.sum(sg.act_bytes)
     eps = moved / jnp.maximum(total, 1.0)
     return out_map, eps
@@ -137,7 +206,11 @@ def evaluate(sg: SimGraph, mapping: jnp.ndarray, ref_latency: jnp.ndarray,
             "rectified": rect}
 
 
+@partial(jax.jit, static_argnames=("reward_scale",))
 def evaluate_population(sg: SimGraph, mappings: jnp.ndarray, ref_latency,
                         reward_scale: float = 5.0):
-    """mappings (P, N, 2) -> dict of (P,) arrays. One vmapped device call."""
+    """mappings (P, N, 2) -> dict of (P,) arrays. One vmapped device call.
+
+    Jitted at this level so repeated generations pay one cached-dispatch,
+    not a fresh vmap trace per call."""
     return jax.vmap(lambda m: evaluate(sg, m, ref_latency, reward_scale))(mappings)

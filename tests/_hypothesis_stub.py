@@ -1,0 +1,83 @@
+"""Deterministic stand-in for `hypothesis` when it is not installed.
+
+The container image does not ship hypothesis; the property tests in this
+suite only use ``@settings(max_examples=..., deadline=None)`` and
+``@given(st.integers(a, b), st.floats(a, b))``.  This stub reproduces that
+surface with seeded ``np.random`` sampling: each ``@given`` test runs
+``max_examples`` times on a fixed-seed stream, so failures are
+reproducible.  Installing the real package (see requirements-dev.txt)
+transparently replaces the stub — conftest only registers it when the
+import fails.
+"""
+from __future__ import annotations
+
+import sys
+import types
+
+import numpy as np
+
+_DEFAULT_MAX_EXAMPLES = 10
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self.draw = draw
+
+
+def integers(min_value, max_value):
+    return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+
+def floats(min_value, max_value, **_kw):
+    return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+
+def booleans():
+    return _Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+
+def sampled_from(seq):
+    seq = list(seq)
+    return _Strategy(lambda rng: seq[int(rng.integers(0, len(seq)))])
+
+
+def settings(max_examples=_DEFAULT_MAX_EXAMPLES, deadline=None, **_kw):
+    def deco(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strategies, **kw_strategies):
+    assert not kw_strategies, "stub supports positional strategies only"
+
+    def deco(fn):
+        # zero-arg signature on purpose: pytest must not mistake the
+        # wrapped test's parameters for fixtures (all drawn values come
+        # from the strategies)
+        def wrapper():
+            n = getattr(wrapper, "_stub_max_examples", _DEFAULT_MAX_EXAMPLES)
+            rng = np.random.default_rng(0)
+            for _ in range(n):
+                fn(*[s.draw(rng) for s in strategies])
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        # let a later (outer) @settings call mutate the wrapper
+        wrapper._stub_max_examples = getattr(fn, "_stub_max_examples",
+                                             _DEFAULT_MAX_EXAMPLES)
+        return wrapper
+    return deco
+
+
+def install() -> None:
+    """Register the stub as `hypothesis` / `hypothesis.strategies`."""
+    h = types.ModuleType("hypothesis")
+    st = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "floats", "booleans", "sampled_from"):
+        setattr(st, name, globals()[name])
+    h.given = given
+    h.settings = settings
+    h.strategies = st
+    sys.modules["hypothesis"] = h
+    sys.modules["hypothesis.strategies"] = st

@@ -1,0 +1,105 @@
+"""The optimized ring-credit rectifier (simulator.rectify) must match the
+plain-numpy per-release-list oracle (reference.rectify_np) bit for bit —
+tiers AND eps — on random mappings across the zoo graphs plus a
+max-fan-in edge case that stresses the release credits."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.graphs.graph import Node, WorkloadGraph
+from repro.graphs.zoo import bert, resnet50, resnet101
+from repro.memsim.reference import rectify_np
+from repro.memsim.simulator import (build_release_idx, build_sim_graph,
+                                    rectify)
+
+
+def star_graph(branches: int = 48) -> WorkloadGraph:
+    """One producer fanning out to `branches` convs that all feed a single
+    sink: every branch activation dies at the same step, so max_release =
+    branches + 1 and the sink releases ~50 activations at once.  Sizes are
+    chosen so random mappings regularly overflow VMEM/CMEM and spill."""
+    nodes = [Node(op="input", ifm=(64, 64, 256), ofm=(64, 64, 256))]
+    edges = []
+    mid = []
+    for _ in range(branches):
+        i = len(nodes)
+        # 2 MB output activation per branch: all 48 live until the sink
+        # (~100 MB peak), so fast-tier placements must spill
+        nodes.append(Node(op="conv", weight_bytes=2.0 * 3 * 3 * 256 * 256,
+                          ifm=(64, 64, 256), ofm=(64, 64, 256),
+                          flops=2.0 * 3 * 3 * 256 * 256 * 64 * 64,
+                          kernel=(3, 3), stride=1))
+        edges.append((0, i))
+        mid.append(i)
+    sink = len(nodes)
+    nodes.append(Node(op="add", ifm=(64, 64, 256), ofm=(64, 64, 256),
+                      flops=64 * 64 * 256 * branches))
+    edges += [(i, sink) for i in mid]
+    g = WorkloadGraph("star", nodes, edges)
+    g.validate()
+    return g
+
+
+GRAPHS = {
+    "resnet50": resnet50,
+    "resnet101": resnet101,
+    "bert": bert,
+    "star_fanin": star_graph,
+}
+
+
+def test_release_idx_is_exact_inverse():
+    g = bert()
+    sg = build_sim_graph(g)
+    last = np.asarray(sg.last_consumer)
+    ridx = np.asarray(sg.release_idx)
+    assert ridx.shape[0] == g.n
+    # every node appears exactly once, in its last consumer's row
+    seen = ridx[ridx >= 0]
+    assert sorted(seen.tolist()) == list(range(g.n))
+    for t in range(g.n):
+        for n in ridx[t][ridx[t] >= 0]:
+            assert last[n] == t
+    # bert's per-head attention gives a release fan-in > 1
+    assert ridx.shape[1] > 1
+    assert (build_release_idx(last) == ridx).all()
+
+
+@pytest.mark.parametrize("name", sorted(GRAPHS))
+def test_rectify_matches_numpy_oracle_bit_for_bit(name):
+    g = GRAPHS[name]()
+    sg = build_sim_graph(g)
+    rng = np.random.default_rng(0)
+    mappings = [rng.integers(0, 3, (g.n, 2)).astype(np.int32)
+                for _ in range(12)]
+    # adversarial constants: all-VMEM / all-CMEM overflow the fast tiers
+    # on every zoo graph, all-HBM never spills
+    mappings += [np.full((g.n, 2), tier, np.int32) for tier in range(3)]
+    n_spilled = 0
+    for m in mappings:
+        rect_j, eps_j = rectify(sg, jnp.asarray(m))
+        rect_n, eps_n = rectify_np(sg, m)
+        assert (np.asarray(rect_j) == rect_n).all()
+        assert np.float32(eps_j) == eps_n          # bit-for-bit, not isclose
+        n_spilled += int(eps_n > 0)
+    # the sweep must actually exercise the spill path
+    assert n_spilled > 0
+
+
+@pytest.mark.parametrize("name", sorted(GRAPHS))
+def test_rectify_idempotent(name):
+    g = GRAPHS[name]()
+    sg = build_sim_graph(g)
+    rng = np.random.default_rng(1)
+    m = rng.integers(0, 3, (g.n, 2)).astype(np.int32)
+    rect, _ = rectify(sg, jnp.asarray(m))
+    rect2, eps2 = rectify(sg, rect)
+    assert float(eps2) == 0.0
+    assert (np.asarray(rect2) == np.asarray(rect)).all()
+
+
+def test_all_hbm_valid_on_star():
+    g = star_graph()
+    sg = build_sim_graph(g)
+    _, eps = rectify(sg, jnp.zeros((g.n, 2), jnp.int32))
+    assert float(eps) == 0.0
