@@ -1,12 +1,17 @@
 # Convenience targets; see ROADMAP.md for the tier-1 verify command.
-.PHONY: test smoke bench
+.PHONY: test smoke bench docs-check
 
 test:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python -m pytest -x -q
 
-# fast suite + 30s inner-loop bench sanity (what CI should run per push)
+# fast suite + 30s inner-loop bench sanity + docs gate (per-push CI)
 smoke:
 	bash benchmarks/smoke.sh
 
 bench:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python benchmarks/run.py
+
+# every REPRO_* env var referenced in src/ must be documented in
+# docs/architecture.md
+docs-check:
+	python tools/docs_check.py

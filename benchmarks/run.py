@@ -13,8 +13,10 @@ from __future__ import annotations
 
 import json
 import os
+import subprocess
 import sys
 import time
+import traceback
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
@@ -123,6 +125,63 @@ def bench_generation() -> None:
     _update_json("generation", payload)
 
 
+def _pop_sharding_child() -> None:
+    """Child body for bench_pop_sharding: time EA-mode generations with
+    the population sharded over every visible device, print one
+    machine-readable line.  Runs in a subprocess because the host device
+    count (XLA_FLAGS) is fixed at first jax init."""
+    import jax
+    from repro.core.egrl import EGRL, EGRLConfig
+    from repro.graphs.zoo import resnet50
+
+    n_dev = len(jax.devices())
+    reps = max(3, min(10, STEPS // 80))
+    # pop 64 split 48/16 so every mesh size in (1, 2, 4) divides both
+    cfg = EGRLConfig(pop_size=64, boltzmann_frac=0.25, elites=8, seed=0)
+    algo = EGRL(resnet50(), cfg, mode="ea", pop_shards=n_dev)
+    for _ in range(2):
+        algo.generation()              # compile + warmup
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        algo.generation()
+    ms = (time.perf_counter() - t0) / reps * 1e3
+    print("POPCHILD " + json.dumps(
+        {"mesh": n_dev, "shards": algo.pop_sharding.n_shards,
+         "ea_ms_per_generation": round(ms, 2)}))
+
+
+def bench_pop_sharding() -> None:
+    """Scaling gate: EA generation time vs ("pop",) mesh size (pop 64 on
+    resnet50, forced-host-device CPU meshes).  Each mesh size runs in a
+    subprocess (the device count must be set before jax initializes);
+    a failing child aborts the bench instead of recording partial data."""
+    payload = {"pop": 64, "graph": "resnet50", "mode": "ea"}
+    for n in (1, 2, 4):
+        env = dict(os.environ,
+                   XLA_FLAGS=f"--xla_force_host_platform_device_count={n}",
+                   JAX_PLATFORMS="cpu",   # forced host devices are CPU-only
+                   BENCH_POP_CHILD="1")
+        out = subprocess.run([sys.executable, os.path.abspath(__file__)],
+                             env=env, capture_output=True, text=True,
+                             timeout=1800)
+        lines = [l for l in out.stdout.splitlines()
+                 if l.startswith("POPCHILD ")]
+        if out.returncode != 0 or not lines:
+            raise RuntimeError(
+                f"pop_sharding child (mesh={n}) failed "
+                f"(exit {out.returncode}):\n{out.stderr[-2000:]}")
+        row = json.loads(lines[-1][len("POPCHILD "):])
+        if row["mesh"] != n or row["shards"] != n:
+            raise RuntimeError(
+                f"pop_sharding child saw {row['mesh']} device(s) / "
+                f"{row['shards']} shard(s) instead of {n} — timings would "
+                f"be recorded under the wrong mesh key")
+        print(f"generation_ea_pop64_mesh{n}_resnet50,"
+              f"{row['ea_ms_per_generation']},ms_per_generation")
+        payload[f"mesh{n}"] = row
+    _update_json("pop_sharding", payload)
+
+
 def bench_fig4() -> None:
     from fig4_speedup import run as fig4
     fig4(steps=STEPS, seeds=tuple(range(SEEDS)), log=lambda m: print(m))
@@ -165,18 +224,22 @@ BENCHES = {
     "simulator": bench_simulator,
     "rectify": bench_rectify,
     "generation": bench_generation,
+    "pop_sharding": bench_pop_sharding,
     "fig4": bench_fig4,
     "fig5": bench_fig5,
     "fig7": bench_fig7,
     "arch_placement": bench_arch_placement,
     "roofline": bench_roofline,
 }
-# "inner_loop" = the fast microbenchmark pair used by benchmarks/smoke.sh
-GROUPS = {"inner_loop": ("rectify", "generation")}
+# "inner_loop" = the fast microbenchmark set used by benchmarks/smoke.sh
+GROUPS = {"inner_loop": ("rectify", "generation", "pop_sharding")}
 
 
 def main(argv=None) -> None:
     sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+    if os.environ.get("BENCH_POP_CHILD"):
+        _pop_sharding_child()
+        return
     argv = sys.argv[1:] if argv is None else argv
     names = []
     for a in argv:
@@ -187,9 +250,21 @@ def main(argv=None) -> None:
                  f"choose from {sorted(BENCHES) + sorted(GROUPS)}")
     t0 = time.time()
     print("name,value,derived")
+    # every requested bench runs; a raising step is reported and turned
+    # into a non-zero exit instead of silently truncating the run (and
+    # with it BENCH_inner_loop.json)
+    failed = []
     for name in (names or list(BENCHES)):
-        BENCHES[name]()
+        try:
+            BENCHES[name]()
+        except Exception:
+            traceback.print_exc()
+            print(f"{name},FAILED,see_traceback_on_stderr")
+            failed.append(name)
     print(f"total_wall_s,{time.time() - t0:.0f},")
+    if failed:
+        sys.exit(f"bench step(s) failed: {failed} — recorded sections in "
+                 f"{_JSON_PATH} are partial for this run")
 
 
 if __name__ == "__main__":

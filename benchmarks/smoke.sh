@@ -1,12 +1,16 @@
 #!/usr/bin/env bash
-# Fast CI smoke: the non-slow test suite plus a ~30 s sanity pass of the
-# inner-loop microbenchmarks (BENCH_STEPS=50 keeps bench_generation to a
-# few repetitions).  Invoke directly or via `make smoke`.
+# Fast CI smoke: the non-slow test suite, the docs gate, and a ~60 s
+# sanity pass of the inner-loop microbenchmarks (BENCH_STEPS=50 keeps
+# bench_generation / bench_pop_sharding to a few repetitions).  Invoke
+# directly or via `make smoke`.  `set -e` + run.py's fail-loud main
+# guarantee a non-zero exit when any sub-step raises — no silently
+# partial BENCH_inner_loop.json.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 python -m pytest -q -m "not slow"
+python tools/docs_check.py
 # reduced-budget sanity only: write the JSON to a temp file so smoke
 # timings never overwrite the tracked benchmarks/BENCH_inner_loop.json
 BENCH_STEPS=50 BENCH_JSON="$(mktemp)" python benchmarks/run.py inner_loop

@@ -1,8 +1,9 @@
 """Evolutionary operators over the mixed population (Algorithm 2),
-device-resident: genomes live as stacked (P, ...) arrays and one jitted
-``evolve`` call runs tournament selection, single-point crossover,
-GNN->Boltzmann prior seeding, and Gaussian mutation for a whole
-generation — no per-child Python loop, no host<->device ping-pong.
+device-resident and mesh-shardable: genomes live as stacked (P, ...)
+arrays and one jitted ``evolve`` call runs tournament selection,
+single-point crossover, GNN->Boltzmann prior seeding, and Gaussian
+mutation for a whole generation — no per-child Python loop, no
+host<->device ping-pong.
 
 Fixed encoding slots (deviation from the seed's list-of-Individuals
 implementation): the population holds ``n_g`` GNN genomes and ``n_b``
@@ -20,15 +21,57 @@ Boltzmann genomes travel through the EA as flat vectors
 (see repro.core.boltzmann.to_flat / from_flat); the prior block and the
 log-temperature block get their own mutation scales, matching the seed
 operators.
+
+Population sharding (PR 2).  ``_evolve_core`` is written so the SAME
+math runs single-device or row-sharded over a 1-D ``("pop",)`` mesh
+axis (``evolve_sharded``), bit-identically:
+
+- *Global/replicated randomness*: every O(P)-sized random draw —
+  tournament candidate indices, mate indices, crossover/mutation gate
+  coins, the per-child PRNG keys — is derived from the generation key
+  alone and computed identically on every shard (a few KiB of ints, not
+  genome-sized), so the choice of shard count cannot change it.
+- *Shard-local heavy work*: crossover blends, mutation noise and
+  GNN->Boltzmann prior seeding — the O(P * V) work — run only for the
+  population rows a shard owns, using that row's replicated per-child
+  key.  ``vmap`` over per-child keys makes each row's computation
+  independent of its neighbours, so computing a subset of rows is
+  bit-identical to computing all of them.
+- *Collectives*: fitness is ``all_gather``-ed (so ranking/top-k is a
+  replicated argsort over the full (P,) vector); cross-shard row
+  fetches clip-gather local candidates, zero the rows the shard does
+  not own, and reduce — ``psum`` for the small replicated results
+  (elite genomes, elite posteriors, ``_gather_rows``) and
+  ``psum_scatter`` for the population-length parent fetch
+  (``_gather_to_slots``, which delivers each shard only the parent rows
+  of the child slots it owns).  Both reductions require the query
+  indices to be replicated.  Each output row receives exactly one
+  non-zero contribution, and IEEE ``x + 0.0 == x``, so the gathers are
+  exact (no matmul precision involved).
+
+Invariants relied on by callers and tests:
+
+- elites occupy the leading rows of each sub-population, sorted by
+  fitness (row 0 = best) — ``egrl.best_gnn_vec`` and the PG-migration
+  slot (last GNN row) depend on this layout;
+- ``evolve_sharded(mesh_S, ...) == evolve(...)`` bitwise for any shard
+  count S dividing both n_g and n_b (tests/test_ea_sharding.py);
+- the single-device ``evolve`` consumes PRNG keys in the same order as
+  the PR 1 implementation, so seeded trajectories are preserved.
 """
 from __future__ import annotations
 
-from typing import Tuple
+from functools import partial
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec
 
 from repro.core import boltzmann as bz
+
+POP_AXIS = "pop"   # mesh axis name the population is sharded over
 
 
 def tournament_indices(key, fitness: jnp.ndarray, n_picks: int,
@@ -72,17 +115,197 @@ def mutate_boltz(key, flat: jnp.ndarray, *, n_nodes: int,
     return jnp.concatenate([prior, jnp.clip(log_t, -3.0, 2.0)])
 
 
-def _gated(gate_key, prob, transformed, original):
-    """Apply `transformed` per-row with probability `prob`."""
-    gate = jax.random.uniform(gate_key, (original.shape[0],)) < prob
-    return jnp.where(gate[:, None], transformed, original)
+# --------------------------------------------------- sharding primitives
+def _all_gather(x: jnp.ndarray, axis_name: Optional[str]) -> jnp.ndarray:
+    """Local shard -> full global vector (identity when unsharded)."""
+    if axis_name is None:
+        return x
+    return jax.lax.all_gather(x, axis_name, tiled=True)
+
+
+def _masked_rows(loc: jnp.ndarray, idx: jnp.ndarray,
+                 axis_name: str) -> jnp.ndarray:
+    """This shard's contribution to a global row gather: local candidates
+    clip-gathered, rows the shard does not own zeroed.  ``idx`` holds
+    global row indices and MUST be replicated (identical on every
+    shard), else the psum/psum_scatter reductions below mix answers to
+    different queries."""
+    chunk = loc.shape[0]
+    li = idx - jax.lax.axis_index(axis_name) * chunk
+    own = (li >= 0) & (li < chunk)
+    rows = loc[jnp.clip(li, 0, max(chunk - 1, 0))]
+    mask = own.reshape(own.shape + (1,) * (rows.ndim - own.ndim))
+    return jnp.where(mask, rows, jnp.zeros_like(rows))
+
+
+def _gather_rows(loc: jnp.ndarray, idx: jnp.ndarray,
+                 axis_name: Optional[str]) -> jnp.ndarray:
+    """Rows of a row-sharded array at replicated *global* indices; the
+    result is replicated.  Every output row is one genome plus exact
+    IEEE zeros under the psum, so this is bitwise ``full[idx]``.  Used
+    for the small gathers (elite genomes / elite posteriors)."""
+    if axis_name is None:
+        return loc[idx]
+    return jax.lax.psum(_masked_rows(loc, idx, axis_name), axis_name)
+
+
+def _gather_to_slots(loc: jnp.ndarray, idx: jnp.ndarray,
+                     axis_name: Optional[str]) -> jnp.ndarray:
+    """Distributed gather: ``idx`` is the replicated, population-length
+    query list (one global row index per population slot); shard s
+    receives rows ``idx[s*chunk:(s+1)*chunk]`` — the parents for the
+    slots it owns.  ``psum_scatter`` keeps the delivered block local
+    (each shard ships 1/S of the masked contributions instead of
+    broadcasting the full gather), and is exact for the same
+    one-nonzero-plus-zeros reason as ``_gather_rows``."""
+    if axis_name is None:
+        return loc[idx]
+    return jax.lax.psum_scatter(_masked_rows(loc, idx, axis_name),
+                                axis_name, scatter_dimension=0, tiled=True)
+
+
+def _slot_ids(chunk: int, axis_name: Optional[str]) -> jnp.ndarray:
+    """Global population-row indices owned by this shard, (chunk,)."""
+    base = 0 if axis_name is None else jax.lax.axis_index(axis_name) * chunk
+    return base + jnp.arange(chunk)
+
+
+# ------------------------------------------------------------- EA kernel
+def _evolve_core(key, g_loc, fit_g_loc, b_loc, fit_b_loc, logits_loc, *,
+                 n_nodes: int, n_g: int, n_b: int, e_g: int, e_b: int,
+                 tournament_k: int, crossover_prob: float, mut_prob: float,
+                 mut_frac: float, mut_std: float,
+                 axis_name: Optional[str] = None
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One EA generation over (possibly shard-local) population rows.
+
+    ``n_g``/``n_b`` are the GLOBAL sub-population sizes; the ``*_loc``
+    arrays hold this shard's contiguous row block (the whole population
+    when ``axis_name is None``).  See the module docstring for the
+    replicated-randomness / shard-local-work split that makes the result
+    independent of the shard count.
+    """
+    keys = jax.random.split(key, 12)
+    ax = axis_name
+    # one fitness ranking shared by elite retention AND cross-type
+    # seeding, so elite rows and elite_logits can never desynchronize
+    fit_g = _all_gather(fit_g_loc, ax) if n_g else fit_g_loc
+    order_g = jnp.argsort(-fit_g) if n_g else None
+
+    # ---- GNN slots: elites + tournament/crossover/mutation children
+    new_g = g_loc
+    if n_g:
+        elites = _gather_rows(g_loc, order_g[:e_g], ax)       # (e_g, V)
+        slots = _slot_ids(g_loc.shape[0], ax)                 # global rows
+        n_child = n_g - e_g
+        if n_child:
+            # replicated draws — identical on every shard
+            parent_idx = tournament_indices(
+                keys[0], fit_g, n_child, tournament_k)
+            mate_idx = jax.random.randint(keys[1], (n_child,), 0, e_g)
+            ck = jax.random.split(keys[2], n_child)
+            gate_x = jax.random.uniform(keys[3], (n_child,)) < crossover_prob
+            mk = jax.random.split(keys[4], n_child)
+            gate_m = jax.random.uniform(keys[5], (n_child,)) < mut_prob
+            # child construction: single-device builds exactly the
+            # n_child children (PR 1 shapes); sharded builds one row per
+            # owned slot — elite slots compute a throwaway child
+            # (uniform chunk shapes), discarded by the select below.
+            # The per-child math is row-independent and keyed by child
+            # index, so both layouts are bitwise identical.  The parent
+            # query list is replicated and population-length so the
+            # distributed gather can route each parent row to the shard
+            # that owns the child slot.
+            if ax is None:
+                c = jnp.arange(n_child)
+                parents = g_loc[parent_idx]                   # (n_child, V)
+            else:
+                c = jnp.clip(slots - e_g, 0, n_child - 1)
+                c_all = jnp.clip(jnp.arange(n_g) - e_g, 0, n_child - 1)
+                parents = _gather_to_slots(
+                    g_loc, parent_idx[c_all], ax)             # (chunk, V)
+            mates = elites[mate_idx[c]]
+            crossed = jax.vmap(single_point_crossover)(ck[c], mates, parents)
+            children = jnp.where(gate_x[c][:, None], crossed, parents)
+            mutated = jax.vmap(lambda k_, g_: mutate_gnn(
+                k_, g_, frac=mut_frac, std=mut_std))(mk[c], children)
+            children = jnp.where(gate_m[c][:, None], mutated, children)
+            new_g = (jnp.concatenate([elites, children]) if ax is None
+                     else jnp.where((slots < e_g)[:, None],
+                                    elites[jnp.clip(slots, 0, e_g - 1)],
+                                    children))
+        else:
+            new_g = elites[slots]
+
+    # ---- Boltzmann slots: mates drawn from the global elite pool; a GNN
+    # mate re-seeds the child from its posterior (Alg 2 lines 16-18)
+    new_b = b_loc
+    if n_b:
+        fit_b = _all_gather(fit_b_loc, ax)
+        order_b = jnp.argsort(-fit_b)
+        elites_b = _gather_rows(b_loc, order_b[:e_b], ax) if e_b else b_loc[:0]
+        slots = _slot_ids(b_loc.shape[0], ax)
+        n_child = n_b - e_b
+        if n_child:
+            parent_idx = tournament_indices(
+                keys[6], fit_b, n_child, tournament_k)
+            n_elite_pool = e_g + e_b if (n_g and e_g) else e_b
+            if ax is None:
+                c = jnp.arange(n_child)
+                parents = b_loc[parent_idx]                   # (n_child, F)
+            else:
+                c = jnp.clip(slots - e_b, 0, n_child - 1)
+                c_all = jnp.clip(jnp.arange(n_b) - e_b, 0, n_child - 1)
+                parents = _gather_to_slots(
+                    b_loc, parent_idx[c_all], ax)             # (chunk, F)
+            children = parents
+            if n_elite_pool:
+                mate_idx = jax.random.randint(
+                    keys[7], (n_child,), 0, n_elite_pool)
+                ck = jax.random.split(keys[8], n_child)
+                gate_x = (jax.random.uniform(keys[9], (n_child,))
+                          < crossover_prob)
+                if n_g and e_g:
+                    elite_logits = _gather_rows(
+                        logits_loc, order_g[:e_g], ax)        # (e_g, N, 2, 3)
+
+                    def cross_one(k, mi, child):
+                        ks, kc = jax.random.split(k)
+                        seeded = bz.to_flat(*bz.seed_from_logits(
+                            elite_logits[jnp.clip(mi, 0, e_g - 1)], ks))
+                        bz_mate = (elites_b[jnp.clip(mi - e_g,
+                                                     0, max(e_b - 1, 0))]
+                                   if e_b else child)
+                        crossed = single_point_crossover(kc, bz_mate, child)
+                        return jnp.where(mi < e_g, seeded, crossed)
+                else:
+                    def cross_one(k, mi, child):
+                        return single_point_crossover(k, elites_b[mi], child)
+                crossed = jax.vmap(cross_one)(ck[c], mate_idx[c], parents)
+                children = jnp.where(gate_x[c][:, None], crossed, parents)
+            mk = jax.random.split(keys[10], n_child)
+            gate_m = jax.random.uniform(keys[11], (n_child,)) < mut_prob
+            mutated = jax.vmap(lambda k_, g_: mutate_boltz(
+                k_, g_, n_nodes=n_nodes, frac=mut_frac))(mk[c], children)
+            children = jnp.where(gate_m[c][:, None], mutated, children)
+            if ax is None:
+                new_b = (jnp.concatenate([elites_b, children])
+                         if e_b else children)
+            else:
+                new_b = (jnp.where((slots < e_b)[:, None],
+                                   elites_b[jnp.clip(slots, 0, e_b - 1)],
+                                   children) if e_b else children)
+        else:
+            new_b = elites_b[slots]
+
+    return new_g, new_b
 
 
 def evolve(key, gnn_pop, fit_g, bz_pop, fit_b, gnn_logits, *,
            n_nodes: int, e_g: int, e_b: int, tournament_k: int,
            crossover_prob: float, mut_prob: float, mut_frac: float,
            mut_std: float) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """One EA generation, entirely on device.
+    """One EA generation, entirely on device (single-device path).
 
     gnn_pop (n_g, V) flat GNN params; bz_pop (n_b, F) flat Boltzmann
     genomes; fit_* their fitnesses; gnn_logits (n_g, N, 2, 3) this
@@ -90,71 +313,41 @@ def evolve(key, gnn_pop, fit_g, bz_pop, fit_b, gnn_logits, *,
     next (gnn_pop, bz_pop) with elites in the leading rows, sorted by
     fitness (row 0 = best).
     """
+    return _evolve_core(
+        key, gnn_pop, fit_g, bz_pop, fit_b, gnn_logits,
+        n_nodes=n_nodes, n_g=gnn_pop.shape[0], n_b=bz_pop.shape[0],
+        e_g=e_g, e_b=e_b, tournament_k=tournament_k,
+        crossover_prob=crossover_prob, mut_prob=mut_prob,
+        mut_frac=mut_frac, mut_std=mut_std, axis_name=None)
+
+
+def evolve_sharded(mesh, key, gnn_pop, fit_g, bz_pop, fit_b, gnn_logits, *,
+                   n_nodes: int, e_g: int, e_b: int, tournament_k: int,
+                   crossover_prob: float, mut_prob: float, mut_frac: float,
+                   mut_std: float) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """``evolve`` with the population row-sharded over mesh axis "pop".
+
+    The populations, fitness vectors and logits are sharded on their
+    leading axis; the key is replicated.  Both sub-population sizes must
+    divide the mesh's "pop" axis size (checked here — a ragged split
+    would silently desynchronize `_slot_ids`).  Bitwise equal to
+    ``evolve`` for any valid shard count.
+    """
     n_g, n_b = gnn_pop.shape[0], bz_pop.shape[0]
-    keys = jax.random.split(key, 12)
-    # one fitness ranking shared by elite retention AND cross-type
-    # seeding, so elite rows and elite_logits can never desynchronize
-    order_g = jnp.argsort(-fit_g) if n_g else None
-
-    # ---- GNN slots: elites + tournament/crossover/mutation children
-    new_g = gnn_pop
-    if n_g:
-        elites = gnn_pop[order_g[:e_g]]                      # (e_g, V)
-        n_child = n_g - e_g
-        if n_child:
-            parents = gnn_pop[
-                tournament_indices(keys[0], fit_g, n_child, tournament_k)]
-            mates = elites[jax.random.randint(keys[1], (n_child,), 0, e_g)]
-            crossed = jax.vmap(single_point_crossover)(
-                jax.random.split(keys[2], n_child), mates, parents)
-            children = _gated(keys[3], crossover_prob, crossed, parents)
-            mutated = jax.vmap(lambda k, g: mutate_gnn(
-                k, g, frac=mut_frac, std=mut_std))(
-                jax.random.split(keys[4], n_child), children)
-            children = _gated(keys[5], mut_prob, mutated, children)
-            new_g = jnp.concatenate([elites, children])
-        else:
-            new_g = elites
-
-    # ---- Boltzmann slots: mates drawn from the global elite pool; a GNN
-    # mate re-seeds the child from its posterior (Alg 2 lines 16-18)
-    new_b = bz_pop
-    if n_b:
-        order_b = jnp.argsort(-fit_b)
-        elites_b = bz_pop[order_b[:e_b]] if e_b else bz_pop[:0]
-        n_child = n_b - e_b
-        if n_child:
-            parents = bz_pop[
-                tournament_indices(keys[6], fit_b, n_child, tournament_k)]
-            n_elite_pool = e_g + e_b if (n_g and e_g) else e_b
-            children = parents
-            if n_elite_pool:
-                mate_idx = jax.random.randint(
-                    keys[7], (n_child,), 0, n_elite_pool)
-                ck = jax.random.split(keys[8], n_child)
-                if n_g and e_g:
-                    elite_logits = gnn_logits[order_g[:e_g]]  # (e_g, N, 2, 3)
-
-                    def cross_one(k, mi, child):
-                        ks, kc = jax.random.split(k)
-                        seeded = bz.to_flat(*bz.seed_from_logits(
-                            elite_logits[jnp.clip(mi, 0, e_g - 1)], ks))
-                        bz_mate = (elites_b[jnp.clip(mi - e_g, 0, max(e_b - 1, 0))]
-                                   if e_b else child)
-                        crossed = single_point_crossover(kc, bz_mate, child)
-                        return jnp.where(mi < e_g, seeded, crossed)
-                else:
-                    def cross_one(k, mi, child):
-                        return single_point_crossover(k, elites_b[mi], child)
-                crossed = jax.vmap(cross_one)(ck, mate_idx, parents)
-                children = _gated(keys[9], crossover_prob, crossed, parents)
-            mutated = jax.vmap(lambda k, g: mutate_boltz(
-                k, g, n_nodes=n_nodes, frac=mut_frac))(
-                jax.random.split(keys[10], n_child), children)
-            children = _gated(keys[11], mut_prob, mutated, children)
-            new_b = (jnp.concatenate([elites_b, children])
-                     if e_b else children)
-        else:
-            new_b = elites_b
-
-    return new_g, new_b
+    n_shards = mesh.shape[POP_AXIS]
+    if (n_g % n_shards) or (n_b % n_shards):
+        raise ValueError(
+            f"population split (n_g={n_g}, n_b={n_b}) not divisible by "
+            f"mesh '{POP_AXIS}' axis ({n_shards}); pick pop_size/"
+            f"boltzmann_frac so both sub-populations divide the shard "
+            f"count, or disable sharding (REPRO_POP_SHARDS=1)")
+    pop = PartitionSpec(POP_AXIS)
+    rep = PartitionSpec()
+    fn = partial(_evolve_core, n_nodes=n_nodes, n_g=n_g, n_b=n_b,
+                 e_g=e_g, e_b=e_b, tournament_k=tournament_k,
+                 crossover_prob=crossover_prob, mut_prob=mut_prob,
+                 mut_frac=mut_frac, mut_std=mut_std, axis_name=POP_AXIS)
+    sharded = shard_map(fn, mesh=mesh,
+                        in_specs=(rep, pop, pop, pop, pop, pop),
+                        out_specs=(pop, pop), check_rep=False)
+    return sharded(key, gnn_pop, fit_g, bz_pop, fit_b, gnn_logits)

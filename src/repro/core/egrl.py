@@ -9,7 +9,9 @@ is a handful of jitted device calls:
 
 1. ONE vmapped GNN forward over the stacked parameter matrix,
 2. ONE vmapped Boltzmann sample (+ one batched PG rollout sample),
-3. ONE vmapped simulator call scoring every mapping (memsim.simulator),
+3. one vmapped simulator call per population part (memsim.simulator;
+   GNN / Boltzmann / PG mappings are scored separately so the sharded
+   parts keep their ("pop",) placement — see generation()),
 4. ONE jitted EA step (core/ea.py: tournament, crossover, seeding,
    mutation over the stacked genomes) plus an in-place migration row
    write for the PG policy.
@@ -19,6 +21,19 @@ pulls (mappings, rewards) out for the replay buffer, best-mapping
 tracking and logging.  The seed implementation instead kept a Python
 list of per-individual genomes: building each child ran 1-3 host RNG
 ops plus device transfers, serializing the inner loop.
+
+Population sharding (PR 2): when more than one device is visible and the
+population split divides the device count (see
+repro.distributed.population for the REPRO_POP_SHARDS policy), the
+stacked genome arrays carry a NamedSharding over a 1-D ("pop",) mesh.
+The GNN forward, rollout sampling and simulator evaluation then
+partition automatically under jit (per-genome work is independent),
+while the EA step runs ea.evolve_sharded — shard-local
+crossover/mutation/seeding with fitness all_gather + exact psum gathers
+for elites and parents — and PG migration writes through a jitted
+scatter that keeps the population sharding.  All paths are bit-identical
+to the single-device ones (tests/test_ea_sharding.py), so sharding is a
+pure capacity/throughput knob, not a different algorithm.
 
 Modes: "egrl" (full), "ea" (ablate PG), "pg" (ablate EA) — the paper's
 baseline agents.
@@ -39,6 +54,7 @@ from repro.core import ea as ea_mod
 from repro.core import gnn
 from repro.core.replay import ReplayBuffer
 from repro.core.sac import SACConfig, SACLearner
+from repro.distributed.population import resolve_pop_sharding
 from repro.graphs.graph import WorkloadGraph
 from repro.memsim.compiler import compiler_reference
 from repro.memsim.simulator import build_sim_graph, evaluate_population
@@ -64,7 +80,9 @@ class EGRLConfig:
 
 class EGRL:
     def __init__(self, graph: WorkloadGraph, cfg: EGRLConfig = EGRLConfig(),
-                 mode: str = "egrl"):
+                 mode: str = "egrl", pop_shards=None):
+        """``pop_shards`` overrides the REPRO_POP_SHARDS policy (int,
+        "auto", or "off"); default: resolve from the environment."""
         assert mode in ("egrl", "ea", "pg")
         self.g = graph
         self.cfg = cfg
@@ -101,23 +119,37 @@ class EGRL:
             for _ in range(self.n_b)]) if self.n_b
             else jnp.zeros((0, bz.flat_size(graph.n))))
 
-        # ---- vmapped population programs
+        # ---- population placement: single device, or row-sharded over a
+        # ("pop",) mesh (repro.distributed.population policy)
+        self.pop_sharding = resolve_pop_sharding(
+            self.n_g, self.n_b, pop_shards)
+        self.gnn_pop = self.pop_sharding.put(self.gnn_pop)
+        self.bz_pop = self.pop_sharding.put(self.bz_pop)
+
+        # ---- vmapped population programs (auto-SPMD over sharded pops)
         feats, adj = self.feats, self.adj
-
-        def gnn_logits_from_vec(vec):
-            return gnn.gnn_forward(
-                gnn.unflatten_params(self._template, vec), feats, adj)
-
-        self._pop_gnn_logits = jax.jit(jax.vmap(gnn_logits_from_vec))
+        self._pop_gnn_logits = jax.jit(
+            lambda pop: gnn.population_logits(self._template, feats, adj, pop))
         self._pop_sample = jax.jit(
             jax.vmap(lambda k, lg: gnn.sample_actions(k, lg)))
         self._pop_boltz = jax.jit(jax.vmap(
             lambda k, f: bz.sample(k, bz.from_flat(f, graph.n))))
-        self._evolve = jax.jit(partial(
-            ea_mod.evolve, n_nodes=graph.n, e_g=self.e_g, e_b=self.e_b,
+        ea_kwargs = dict(
+            n_nodes=graph.n, e_g=self.e_g, e_b=self.e_b,
             tournament_k=cfg.tournament_k, crossover_prob=cfg.crossover_prob,
-            mut_prob=cfg.mut_prob, mut_frac=cfg.mut_frac,
-            mut_std=cfg.mut_std))
+            mut_prob=cfg.mut_prob, mut_frac=cfg.mut_frac, mut_std=cfg.mut_std)
+        if self.pop_sharding.active:
+            self._evolve = jax.jit(partial(
+                ea_mod.evolve_sharded, self.pop_sharding.mesh, **ea_kwargs))
+            # PG migration: jitted row write that lands back in the
+            # population sharding (a collective scatter, not a host copy)
+            self._migrate = jax.jit(
+                lambda pop, vec: pop.at[self.n_g - 1].set(vec),
+                out_shardings=self.pop_sharding.sharding)
+        else:
+            self._evolve = jax.jit(partial(ea_mod.evolve, **ea_kwargs))
+            self._migrate = jax.jit(
+                lambda pop, vec: pop.at[self.n_g - 1].set(vec))
 
         self.steps = 0
         self.best_reward = -np.inf
@@ -134,35 +166,48 @@ class EGRL:
         cfg = self.cfg
         n_g, n_b = self.n_g, self.n_b
 
-        # ---- rollouts: stacked device calls, nothing leaves the device
-        parts = []
+        # ---- rollouts: stacked device calls, nothing leaves the device.
+        # Each part (GNN pop, Boltzmann pop, PG rollouts) is evaluated
+        # separately: concatenating the pop-sharded population samples
+        # with the single-device PG mappings would resolve the result to
+        # fully-replicated and throw away the ("pop",) sharding, so the
+        # per-part calls keep evaluation shard-local AND hand the EA its
+        # fitness vectors without slicing a mixed array.  Per-mapping
+        # math is row-independent, so the rewards are bitwise the same
+        # as one fused call.
+        parts, results = {}, {}
         logits_g = None
         if n_g:
             logits_g = self._pop_gnn_logits(self.gnn_pop)
-            parts.append(self._pop_sample(
-                jax.random.split(self._k(), n_g), logits_g))
+            parts["g"] = self._pop_sample(
+                jax.random.split(self._k(), n_g), logits_g)
         if n_b:
-            parts.append(self._pop_boltz(
-                jax.random.split(self._k(), n_b), self.bz_pop))
+            parts["b"] = self._pop_boltz(
+                jax.random.split(self._k(), n_b), self.bz_pop)
         if self.mode != "ea":
-            parts.append(self.learner.explore_actions(cfg.pg_rollouts))
-        all_maps = jnp.concatenate(parts, axis=0)
-        res = evaluate_population(self.sg, all_maps, self.ref_latency,
-                                  cfg.reward_scale)
-        rewards_dev = res["reward"]
+            parts["pg"] = self.learner.explore_actions(cfg.pg_rollouts)
+        for name, maps in parts.items():
+            results[name] = evaluate_population(
+                self.sg, maps, self.ref_latency, cfg.reward_scale)
 
         # ---- EA step (Algorithm 2 lines 8-25), still on device
         if n_g or n_b:
+            empty = jnp.zeros((0,), jnp.float32)
             self.gnn_pop, self.bz_pop = self._evolve(
-                self._k(), self.gnn_pop, rewards_dev[:n_g],
-                self.bz_pop, rewards_dev[n_g:n_g + n_b],
+                self._k(),
+                self.gnn_pop,
+                results["g"]["reward"] if n_g else empty,
+                self.bz_pop,
+                results["b"]["reward"] if n_b else empty,
                 logits_g if logits_g is not None
                 else jnp.zeros((0, self.g.n, 2, 3)))
 
         # ---- the ONE host sync per generation: buffer + logging
-        rewards = np.asarray(rewards_dev)
-        maps_np = np.asarray(all_maps)
-        valid = np.asarray(res["valid"])
+        rewards = np.concatenate(
+            [np.asarray(results[n]["reward"]) for n in parts])
+        maps_np = np.concatenate([np.asarray(m) for m in parts.values()])
+        valid = np.concatenate(
+            [np.asarray(results[n]["valid"]) for n in parts])
         self.steps += len(maps_np)
         self.buffer.add_batch(maps_np, rewards)
         gen_best = int(np.argmax(rewards))
@@ -180,8 +225,8 @@ class EGRL:
             # always picked a child, never an elite).  When every GNN
             # slot is an elite (n_g == e_g) skip, preserving elitism.
             if self.mode == "egrl" and n_g > self.e_g:
-                self.gnn_pop = self.gnn_pop.at[n_g - 1].set(
-                    gnn.flatten_params(self.learner.actor))
+                self.gnn_pop = self._migrate(
+                    self.gnn_pop, gnn.flatten_params(self.learner.actor))
 
         rec = {
             "steps": self.steps,

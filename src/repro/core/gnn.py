@@ -154,6 +154,21 @@ def entropy(logits):
     return -(jnp.exp(lp) * lp).sum(-1).mean()
 
 
+def population_logits(template, feats, adj, pop_matrix,
+                      backend: Optional[str] = None):
+    """Stacked-population forward: (P, V) flat params -> (P, N, 2, 3).
+
+    A pure vmap over the leading axis, so when ``pop_matrix`` carries a
+    ``NamedSharding`` over a ``("pop",)`` mesh axis the jitted call
+    partitions automatically (auto-SPMD): each device runs the forward
+    only for the genome rows it owns — no host round-trips and no
+    collectives, since per-genome forwards are independent.  ``feats`` /
+    ``adj`` / the ``template`` pytree are replicated.
+    """
+    return jax.vmap(lambda vec: gnn_forward(
+        unflatten_params(template, vec), feats, adj, backend))(pop_matrix)
+
+
 # ------------------------------------------------------- flat param helpers
 def flatten_params(p) -> jnp.ndarray:
     leaves = jax.tree.leaves(p)

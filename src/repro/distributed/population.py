@@ -1,0 +1,94 @@
+"""EA population sharding policy: pick a shard count, build the
+``("pop",)`` mesh, and place the stacked (P, ...) genome arrays.
+
+The EGRL inner loop stores its population as stacked device arrays
+(core/egrl.py); this module decides whether those arrays live on one
+chip or are row-sharded across a 1-D device mesh.  The actual sharded
+EA step is ``repro.core.ea.evolve_sharded`` (bit-identical to the
+single-device ``evolve`` for any valid shard count); population
+evaluation and the population GNN forward partition automatically under
+jit once their inputs carry a ``NamedSharding`` (auto-SPMD — every
+per-genome computation is independent, so no collectives are needed
+outside the EA step).
+
+Shard-count policy (``REPRO_POP_SHARDS`` env var, or the ``pop_shards``
+argument to ``EGRL``):
+
+- ``"auto"`` (default): the largest device count that divides BOTH
+  sub-population sizes (n_g GNN genomes, n_b Boltzmann genomes) — a
+  ragged split would break the slot arithmetic that makes the sharded
+  EA bit-identical.  On a single-device host this resolves to 1, i.e.
+  the plain single-device path, so CPU tests and benchmarks are
+  unaffected.
+- ``"1"`` / ``"0"`` / ``"off"``: force the single-device path.
+- an integer > 1: shard over exactly that many devices; raises
+  ``ValueError`` (fail loudly, never silently fall back) when it does
+  not divide both sub-population sizes or exceeds the device count.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Optional, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+from repro.core.ea import POP_AXIS
+from repro.launch.mesh import make_pop_mesh
+
+
+@dataclasses.dataclass(frozen=True)
+class PopSharding:
+    """Resolved placement for the stacked population arrays."""
+    mesh: Optional[Mesh]    # None => single-device path
+    n_shards: int
+
+    @property
+    def active(self) -> bool:
+        return self.mesh is not None
+
+    @property
+    def sharding(self) -> NamedSharding:
+        """Rows split over the "pop" mesh axis (leading-dim sharding)."""
+        assert self.mesh is not None
+        return NamedSharding(self.mesh, PartitionSpec(POP_AXIS))
+
+    def put(self, x):
+        """Place a stacked (P, ...) array (no-op when unsharded)."""
+        return jax.device_put(x, self.sharding) if self.active else x
+
+
+def resolve_pop_sharding(n_g: int, n_b: int,
+                         requested: Union[int, str, None] = None
+                         ) -> PopSharding:
+    """Resolve the shard count for an (n_g, n_b) population split.
+
+    ``requested`` overrides the ``REPRO_POP_SHARDS`` env var; see the
+    module docstring for the accepted values.
+    """
+    req = requested if requested is not None else \
+        os.environ.get("REPRO_POP_SHARDS", "auto")
+    req = str(req).strip().lower()
+    if n_g + n_b == 0:                      # pure-PG mode: nothing to shard
+        return PopSharding(None, 1)
+    n_dev = len(jax.devices())
+    if req in ("auto", ""):
+        n = max(d for d in range(1, n_dev + 1)
+                if n_g % d == 0 and n_b % d == 0)
+    elif req in ("0", "1", "off"):
+        n = 1
+    else:
+        n = int(req)
+        if n > n_dev:
+            raise ValueError(
+                f"REPRO_POP_SHARDS={n} but only {n_dev} device(s) visible")
+        if n_g % n or n_b % n:
+            raise ValueError(
+                f"REPRO_POP_SHARDS={n} does not divide the population "
+                f"split (n_g={n_g}, n_b={n_b}); pick pop_size/"
+                f"boltzmann_frac so both sub-populations are multiples "
+                f"of the shard count")
+    if n <= 1:
+        return PopSharding(None, 1)
+    return PopSharding(make_pop_mesh(n), n)

@@ -15,3 +15,14 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_mesh(shape, axes):
     """Arbitrary mesh (tests use small shapes like (2, 4))."""
     return jax.make_mesh(tuple(shape), tuple(axes))
+
+
+def make_pop_mesh(n_shards: int | None = None):
+    """1-D mesh over the EA population axis ``("pop",)``.
+
+    Uses the first ``n_shards`` local devices (default: all of them).
+    The EGRL driver shards the stacked (P, ...) genome arrays over this
+    axis; see repro.distributed.population for the shard-count policy.
+    """
+    n = n_shards or len(jax.devices())
+    return jax.make_mesh((n,), ("pop",))

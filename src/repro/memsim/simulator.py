@@ -38,6 +38,20 @@ Everything is pure jnp over static per-graph arrays, so a whole EA
 population's mappings evaluate in ONE vmapped call — the JAX-native
 replacement for the paper's serial hardware-in-the-loop rollouts.
 A bit-for-bit numpy oracle lives in ``repro.memsim.reference``.
+
+Invariants (PR 1, relied on by the EA and the parity tests):
+- ring width W = max activation lifetime (max(last_consumer[t] - t) + 1)
+  is baked into ``ring_init``'s SHAPE, so jit treats it as static; every
+  credit push lands at row ``last_consumer % W`` strictly before that
+  row is next popped (a lifetime can never exceed W by construction);
+- float32 adds follow the ascending-node order of the reference oracle,
+  so rectify is bit-exact against ``repro.memsim.reference``;
+- mappings travel as stacked (P, N, 2) int32 arrays (the EA's
+  stacked-genome layout): ``evaluate_population`` vmaps over the
+  leading axis and every per-mapping computation is independent, so a
+  population axis sharded over a device mesh (PR 2: NamedSharding over
+  ("pop",), see repro.distributed.population) partitions automatically
+  under jit — no collectives, no host round-trips.
 """
 from __future__ import annotations
 
@@ -212,5 +226,7 @@ def evaluate_population(sg: SimGraph, mappings: jnp.ndarray, ref_latency,
     """mappings (P, N, 2) -> dict of (P,) arrays. One vmapped device call.
 
     Jitted at this level so repeated generations pay one cached-dispatch,
-    not a fresh vmap trace per call."""
+    not a fresh vmap trace per call.  Accepts a sharded leading axis:
+    per-mapping work is independent, so a population sharded over a
+    ("pop",) mesh axis evaluates shard-locally under auto-SPMD."""
     return jax.vmap(lambda m: evaluate(sg, m, ref_latency, reward_scale))(mappings)

@@ -1,0 +1,42 @@
+"""Docs gate: every ``REPRO_*`` environment variable referenced anywhere
+under ``src/`` must be documented in ``docs/architecture.md`` (the
+canonical env-var reference).  Exits non-zero listing the undocumented
+variables; wired into ``make docs-check`` and ``benchmarks/smoke.sh``.
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+VAR_RE = re.compile(r"\bREPRO_[A-Z0-9_]+\b")
+
+
+def main() -> int:
+    used = set()
+    for path in sorted((ROOT / "src").rglob("*.py")):
+        used |= set(VAR_RE.findall(path.read_text()))
+    doc_path = ROOT / "docs" / "architecture.md"
+    if not doc_path.exists():
+        print(f"docs-check: {doc_path.relative_to(ROOT)} does not exist",
+              file=sys.stderr)
+        return 1
+    documented = set(VAR_RE.findall(doc_path.read_text()))
+    missing = sorted(used - documented)
+    if missing:
+        print(f"docs-check: docs/architecture.md is missing "
+              f"{len(missing)} REPRO_* variable(s) referenced in src/: "
+              f"{', '.join(missing)}", file=sys.stderr)
+        return 1
+    stale = sorted(documented - used)
+    if stale:
+        print(f"docs-check: note — documented but not referenced in src/: "
+              f"{', '.join(stale)}")
+    print(f"docs-check OK: {len(used)} REPRO_* variable(s) documented "
+          f"({', '.join(sorted(used))})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
