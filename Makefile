@@ -1,5 +1,5 @@
 # Convenience targets; see ROADMAP.md for the tier-1 verify command.
-.PHONY: test smoke bench docs-check
+.PHONY: test smoke bench bench-zoo docs-check
 
 test:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python -m pytest -x -q
@@ -10,6 +10,11 @@ smoke:
 
 bench:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python benchmarks/run.py
+
+# zoo-wide pop-64 evaluation over the padded GraphBatch (incl. the
+# 1k+-node graphs) vs the per-graph loop
+bench-zoo:
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python benchmarks/run.py zoo_eval
 
 # every REPRO_* env var referenced in src/ must be documented in
 # docs/architecture.md

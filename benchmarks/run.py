@@ -100,6 +100,63 @@ def bench_rectify() -> None:
     _update_json("rectify", payload)
 
 
+def bench_zoo_eval() -> None:
+    """Workload-batch gate: zoo-wide pop-64 evaluation — every graph in
+    the registry (including both 1k+-node synthetics) scored in ONE
+    jitted device call over a padded GraphBatch — vs the per-graph
+    evaluate_population loop on the same mappings.  Writes the zoo_eval
+    section of BENCH_inner_loop.json (us/rollout, batch geometry)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.graphs.batch import build_graph_batch
+    from repro.graphs.zoo import WORKLOADS
+    from repro.memsim.batch import evaluate_population_zoo
+    from repro.memsim.simulator import build_sim_graph, evaluate_population
+
+    pop = 64
+    reps = max(3, min(10, STEPS // 80))    # BENCH_STEPS scales the loop
+    graphs = [f() for f in WORKLOADS.values()]
+    assert sum(g.n >= 1000 for g in graphs) >= 2
+    gb = build_graph_batch(graphs)
+    rollouts = pop * gb.n_graphs
+    maps = jax.random.randint(jax.random.PRNGKey(0),
+                              (pop, gb.n_graphs, gb.n_max, 2), 0, 3)
+    r = evaluate_population_zoo(gb, maps)
+    jax.block_until_ready(r["reward"])
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(evaluate_population_zoo(gb, maps)["reward"])
+    us_zoo = (time.perf_counter() - t0) / reps / rollouts * 1e6
+
+    # per-graph loop on the same mappings (the path the batch replaces),
+    # scored against the same reference latencies the batch holds
+    singles = []
+    for i, g in enumerate(graphs):
+        sg = build_sim_graph(g)
+        singles.append((sg, jnp.float32(gb.ref_latency[i]),
+                        maps[:, i, :g.n]))
+    for sg, ref, m in singles:
+        jax.block_until_ready(evaluate_population(sg, m, ref)["reward"])
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        for sg, ref, m in singles:
+            jax.block_until_ready(evaluate_population(sg, m, ref)["reward"])
+    us_loop = (time.perf_counter() - t0) / reps / rollouts * 1e6
+
+    print(f"zoo_eval_batched,{us_zoo:.1f},us_per_rollout_pop{pop}"
+          f"_graphs{gb.n_graphs}")
+    print(f"zoo_eval_pergraph_loop,{us_loop:.1f},us_per_rollout_pop{pop}"
+          f"_graphs{gb.n_graphs}")
+    _update_json("zoo_eval", {
+        "pop": pop,
+        "graphs": {g.name: g.n for g in graphs},
+        "n_max": gb.n_max,
+        "rollouts_per_call": rollouts,
+        "batched_us_per_rollout": round(us_zoo, 2),
+        "pergraph_loop_us_per_rollout": round(us_loop, 2),
+    })
+
+
 def bench_generation() -> None:
     """Inner-loop gate: ms per EGRL generation (pop 20), EA-only (the
     device-resident EA path) and full EGRL (adds SAC updates)."""
@@ -223,6 +280,7 @@ def bench_roofline() -> None:
 BENCHES = {
     "simulator": bench_simulator,
     "rectify": bench_rectify,
+    "zoo_eval": bench_zoo_eval,
     "generation": bench_generation,
     "pop_sharding": bench_pop_sharding,
     "fig4": bench_fig4,
@@ -232,7 +290,8 @@ BENCHES = {
     "roofline": bench_roofline,
 }
 # "inner_loop" = the fast microbenchmark set used by benchmarks/smoke.sh
-GROUPS = {"inner_loop": ("rectify", "generation", "pop_sharding")}
+GROUPS = {"inner_loop": ("rectify", "zoo_eval", "generation",
+                         "pop_sharding")}
 
 
 def main(argv=None) -> None:

@@ -1,8 +1,9 @@
 #!/usr/bin/env bash
-# Fast CI smoke: the non-slow test suite, the docs gate, and a ~60 s
-# sanity pass of the inner-loop microbenchmarks (BENCH_STEPS=50 keeps
-# bench_generation / bench_pop_sharding to a few repetitions).  Invoke
-# directly or via `make smoke`.  `set -e` + run.py's fail-loud main
+# Fast CI smoke: the non-slow test suite, the docs gate, and a sanity
+# pass of the inner-loop microbenchmarks — rectify, the zoo-wide
+# GraphBatch evaluation (bench_zoo_eval, incl. the 1k+-node graphs),
+# generation, and pop_sharding (BENCH_STEPS=50 keeps the timed loops to
+# a few repetitions).  Invoke directly or via `make smoke`.  `set -e` + run.py's fail-loud main
 # guarantee a non-zero exit when any sub-step raises — no silently
 # partial BENCH_inner_loop.json.
 set -euo pipefail

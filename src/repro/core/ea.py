@@ -38,16 +38,26 @@ axis (``evolve_sharded``), bit-identically:
   independent of its neighbours, so computing a subset of rows is
   bit-identical to computing all of them.
 - *Collectives*: fitness is ``all_gather``-ed (so ranking/top-k is a
-  replicated argsort over the full (P,) vector); cross-shard row
-  fetches clip-gather local candidates, zero the rows the shard does
-  not own, and reduce — ``psum`` for the small replicated results
-  (elite genomes, elite posteriors, ``_gather_rows``) and
-  ``psum_scatter`` for the population-length parent fetch
-  (``_gather_to_slots``, which delivers each shard only the parent rows
-  of the child slots it owns).  Both reductions require the query
-  indices to be replicated.  Each output row receives exactly one
-  non-zero contribution, and IEEE ``x + 0.0 == x``, so the gathers are
-  exact (no matmul precision involved).
+  replicated argsort over the full (P,) vector); the small replicated
+  fetches (elite genomes, elite posteriors — ``_gather_rows``)
+  clip-gather local candidates, zero the rows the shard does not own,
+  and ``psum`` — each output row is one genome plus exact IEEE zeros,
+  so the gather is bitwise ``full[idx]``.  The population-length parent
+  fetch (``_gather_to_slots``) is routed as a ``ppermute`` ring
+  instead: each shard's (P/S, V) block visits every shard and child
+  slots copy their parent row as the owning block passes, so the
+  per-shard transient is O(P/S · V) (the earlier psum_scatter
+  formulation materialized a population-length masked buffer per
+  shard) and no float reduction is involved at all.  Both fetches
+  require the query indices to be replicated.
+
+Padded populations (PR 3): when the real sub-population sizes do not
+divide the shard count, repro.distributed.population pads the stacked
+arrays with masked rows.  ``n_g``/``n_b`` keep the REAL sizes: every
+random draw is sized/bounded by them and the caller hands padding rows
+``-inf`` fitness, so pads are never elites, parents or mates and the
+real-row trajectory is bit-identical to the unpadded single-device run;
+padding slots just receive throwaway children.
 
 Invariants relied on by callers and tests:
 
@@ -75,10 +85,14 @@ POP_AXIS = "pop"   # mesh axis name the population is sharded over
 
 
 def tournament_indices(key, fitness: jnp.ndarray, n_picks: int,
-                       k: int) -> jnp.ndarray:
+                       k: int, n_pool: Optional[int] = None) -> jnp.ndarray:
     """(n_picks,) winner indices; each pick is the argmax-fitness of k
-    uniform draws with replacement (Alg 2 tournament selection)."""
-    cands = jax.random.randint(key, (n_picks, k), 0, fitness.shape[0])
+    uniform draws with replacement (Alg 2 tournament selection).
+    ``n_pool`` restricts the draw to the first ``n_pool`` rows — the
+    REAL rows of a padded population — and defaults to all of them, so
+    the PRNG stream of an unpadded run is unchanged."""
+    cands = jax.random.randint(key, (n_picks, k), 0,
+                               n_pool or fitness.shape[0])
     return cands[jnp.arange(n_picks), jnp.argmax(fitness[cands], axis=1)]
 
 
@@ -150,18 +164,45 @@ def _gather_rows(loc: jnp.ndarray, idx: jnp.ndarray,
 
 
 def _gather_to_slots(loc: jnp.ndarray, idx: jnp.ndarray,
-                     axis_name: Optional[str]) -> jnp.ndarray:
+                     axis_name: Optional[str],
+                     axis_size: int = 1) -> jnp.ndarray:
     """Distributed gather: ``idx`` is the replicated, population-length
     query list (one global row index per population slot); shard s
     receives rows ``idx[s*chunk:(s+1)*chunk]`` — the parents for the
-    slots it owns.  ``psum_scatter`` keeps the delivered block local
-    (each shard ships 1/S of the masked contributions instead of
-    broadcasting the full gather), and is exact for the same
-    one-nonzero-plus-zeros reason as ``_gather_rows``."""
+    slots it owns.
+
+    Routed as a ring: each shard's (chunk, V) block visits every shard
+    via S-1 ``ppermute`` hops, and a shard copies the rows it asked for
+    as the owning block passes by.  The per-shard transient is the
+    visiting block + the output — O(P/S · V) — where the previous
+    psum_scatter formulation materialized a population-length masked
+    buffer, O(P · V), per shard.  (A static-shape ``all_to_all`` cannot
+    go below O(P·V) here: tournament winners may collide, so one shard
+    can own the parents of every child slot and each (src, dst) pair
+    must budget a full chunk.)  Rows are pure copies — each output slot
+    is written on exactly the hop where the owner's block visits — so
+    the gather stays bitwise exact; no float reduction is involved at
+    all (the psum path relied on IEEE ``x + 0 == x`` for the same
+    guarantee).
+    """
     if axis_name is None:
         return loc[idx]
-    return jax.lax.psum_scatter(_masked_rows(loc, idx, axis_name),
-                                axis_name, scatter_dimension=0, tiled=True)
+    chunk = loc.shape[0]
+    me = jax.lax.axis_index(axis_name)
+    my_idx = jax.lax.dynamic_slice_in_dim(idx, me * chunk, chunk)
+    out = jnp.zeros((chunk,) + loc.shape[1:], loc.dtype)
+    block = loc
+    perm = [(i, (i + 1) % axis_size) for i in range(axis_size)]
+    for hop in range(axis_size):
+        owner = (me - hop) % axis_size      # whose rows are visiting
+        li = my_idx - owner * chunk
+        own = (li >= 0) & (li < chunk)
+        rows = block[jnp.clip(li, 0, max(chunk - 1, 0))]
+        mask = own.reshape(own.shape + (1,) * (rows.ndim - own.ndim))
+        out = jnp.where(mask, rows, out)
+        if hop < axis_size - 1:
+            block = jax.lax.ppermute(block, axis_name, perm)
+    return out
 
 
 def _slot_ids(chunk: int, axis_name: Optional[str]) -> jnp.ndarray:
@@ -175,16 +216,29 @@ def _evolve_core(key, g_loc, fit_g_loc, b_loc, fit_b_loc, logits_loc, *,
                  n_nodes: int, n_g: int, n_b: int, e_g: int, e_b: int,
                  tournament_k: int, crossover_prob: float, mut_prob: float,
                  mut_frac: float, mut_std: float,
-                 axis_name: Optional[str] = None
+                 n_g_pad: Optional[int] = None,
+                 n_b_pad: Optional[int] = None,
+                 axis_name: Optional[str] = None,
+                 axis_size: int = 1
                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """One EA generation over (possibly shard-local) population rows.
 
-    ``n_g``/``n_b`` are the GLOBAL sub-population sizes; the ``*_loc``
-    arrays hold this shard's contiguous row block (the whole population
-    when ``axis_name is None``).  See the module docstring for the
-    replicated-randomness / shard-local-work split that makes the result
-    independent of the shard count.
+    ``n_g``/``n_b`` are the GLOBAL *real* sub-population sizes;
+    ``n_g_pad``/``n_b_pad`` (default: equal) are the global ROW counts
+    when the arrays carry masked padding slots so a non-dividing
+    population can still shard (repro.distributed.population).  The
+    ``*_loc`` arrays hold this shard's contiguous row block (the whole
+    population when ``axis_name is None``).  Every random draw is sized
+    and bounded by the REAL counts and the caller feeds padding slots
+    ``-inf`` fitness, so padded rows are never parents, mates or elites
+    and the real-row trajectory is bit-identical to the unpadded run;
+    padding slots receive throwaway children (same clipped-index trick
+    the sharded path already used for elite slots).  See the module
+    docstring for the replicated-randomness / shard-local-work split
+    that makes the result independent of the shard count.
     """
+    n_g_pad = n_g if n_g_pad is None else n_g_pad
+    n_b_pad = n_b if n_b_pad is None else n_b_pad
     keys = jax.random.split(key, 12)
     ax = axis_name
     # one fitness ranking shared by elite retention AND cross-type
@@ -198,44 +252,47 @@ def _evolve_core(key, g_loc, fit_g_loc, b_loc, fit_b_loc, logits_loc, *,
         elites = _gather_rows(g_loc, order_g[:e_g], ax)       # (e_g, V)
         slots = _slot_ids(g_loc.shape[0], ax)                 # global rows
         n_child = n_g - e_g
+        plain = ax is None and n_g_pad == n_g   # unpadded single device
         if n_child:
-            # replicated draws — identical on every shard
+            # replicated draws — identical on every shard, sized by the
+            # REAL population so padding cannot perturb the stream
             parent_idx = tournament_indices(
-                keys[0], fit_g, n_child, tournament_k)
+                keys[0], fit_g, n_child, tournament_k, n_pool=n_g)
             mate_idx = jax.random.randint(keys[1], (n_child,), 0, e_g)
             ck = jax.random.split(keys[2], n_child)
             gate_x = jax.random.uniform(keys[3], (n_child,)) < crossover_prob
             mk = jax.random.split(keys[4], n_child)
             gate_m = jax.random.uniform(keys[5], (n_child,)) < mut_prob
-            # child construction: single-device builds exactly the
-            # n_child children (PR 1 shapes); sharded builds one row per
-            # owned slot — elite slots compute a throwaway child
-            # (uniform chunk shapes), discarded by the select below.
-            # The per-child math is row-independent and keyed by child
-            # index, so both layouts are bitwise identical.  The parent
-            # query list is replicated and population-length so the
-            # distributed gather can route each parent row to the shard
-            # that owns the child slot.
-            if ax is None:
+            # child construction: the plain path builds exactly the
+            # n_child children (PR 1 shapes); sharded/padded builds one
+            # row per owned slot — elite and padding slots compute a
+            # throwaway child (uniform chunk shapes), discarded or dead
+            # by the select below.  The per-child math is row-
+            # independent and keyed by child index, so both layouts are
+            # bitwise identical on real rows.  The parent query list is
+            # replicated and population-length so the ring gather can
+            # route each parent row to the shard that owns the child
+            # slot.
+            if plain:
                 c = jnp.arange(n_child)
                 parents = g_loc[parent_idx]                   # (n_child, V)
             else:
                 c = jnp.clip(slots - e_g, 0, n_child - 1)
-                c_all = jnp.clip(jnp.arange(n_g) - e_g, 0, n_child - 1)
+                c_all = jnp.clip(jnp.arange(n_g_pad) - e_g, 0, n_child - 1)
                 parents = _gather_to_slots(
-                    g_loc, parent_idx[c_all], ax)             # (chunk, V)
+                    g_loc, parent_idx[c_all], ax, axis_size)  # (chunk, V)
             mates = elites[mate_idx[c]]
             crossed = jax.vmap(single_point_crossover)(ck[c], mates, parents)
             children = jnp.where(gate_x[c][:, None], crossed, parents)
             mutated = jax.vmap(lambda k_, g_: mutate_gnn(
                 k_, g_, frac=mut_frac, std=mut_std))(mk[c], children)
             children = jnp.where(gate_m[c][:, None], mutated, children)
-            new_g = (jnp.concatenate([elites, children]) if ax is None
+            new_g = (jnp.concatenate([elites, children]) if plain
                      else jnp.where((slots < e_g)[:, None],
                                     elites[jnp.clip(slots, 0, e_g - 1)],
                                     children))
         else:
-            new_g = elites[slots]
+            new_g = elites[jnp.clip(slots, 0, max(e_g - 1, 0))]
 
     # ---- Boltzmann slots: mates drawn from the global elite pool; a GNN
     # mate re-seeds the child from its posterior (Alg 2 lines 16-18)
@@ -246,18 +303,19 @@ def _evolve_core(key, g_loc, fit_g_loc, b_loc, fit_b_loc, logits_loc, *,
         elites_b = _gather_rows(b_loc, order_b[:e_b], ax) if e_b else b_loc[:0]
         slots = _slot_ids(b_loc.shape[0], ax)
         n_child = n_b - e_b
+        plain = ax is None and n_b_pad == n_b
         if n_child:
             parent_idx = tournament_indices(
-                keys[6], fit_b, n_child, tournament_k)
+                keys[6], fit_b, n_child, tournament_k, n_pool=n_b)
             n_elite_pool = e_g + e_b if (n_g and e_g) else e_b
-            if ax is None:
+            if plain:
                 c = jnp.arange(n_child)
                 parents = b_loc[parent_idx]                   # (n_child, F)
             else:
                 c = jnp.clip(slots - e_b, 0, n_child - 1)
-                c_all = jnp.clip(jnp.arange(n_b) - e_b, 0, n_child - 1)
+                c_all = jnp.clip(jnp.arange(n_b_pad) - e_b, 0, n_child - 1)
                 parents = _gather_to_slots(
-                    b_loc, parent_idx[c_all], ax)             # (chunk, F)
+                    b_loc, parent_idx[c_all], ax, axis_size)  # (chunk, F)
             children = parents
             if n_elite_pool:
                 mate_idx = jax.random.randint(
@@ -288,7 +346,7 @@ def _evolve_core(key, g_loc, fit_g_loc, b_loc, fit_b_loc, logits_loc, *,
             mutated = jax.vmap(lambda k_, g_: mutate_boltz(
                 k_, g_, n_nodes=n_nodes, frac=mut_frac))(mk[c], children)
             children = jnp.where(gate_m[c][:, None], mutated, children)
-            if ax is None:
+            if plain:
                 new_b = (jnp.concatenate([elites_b, children])
                          if e_b else children)
             else:
@@ -296,7 +354,7 @@ def _evolve_core(key, g_loc, fit_g_loc, b_loc, fit_b_loc, logits_loc, *,
                                    elites_b[jnp.clip(slots, 0, e_b - 1)],
                                    children) if e_b else children)
         else:
-            new_b = elites_b[slots]
+            new_b = elites_b[jnp.clip(slots, 0, max(e_b - 1, 0))]
 
     return new_g, new_b
 
@@ -304,18 +362,25 @@ def _evolve_core(key, g_loc, fit_g_loc, b_loc, fit_b_loc, logits_loc, *,
 def evolve(key, gnn_pop, fit_g, bz_pop, fit_b, gnn_logits, *,
            n_nodes: int, e_g: int, e_b: int, tournament_k: int,
            crossover_prob: float, mut_prob: float, mut_frac: float,
-           mut_std: float) -> Tuple[jnp.ndarray, jnp.ndarray]:
+           mut_std: float, n_g: Optional[int] = None,
+           n_b: Optional[int] = None) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """One EA generation, entirely on device (single-device path).
 
     gnn_pop (n_g, V) flat GNN params; bz_pop (n_b, F) flat Boltzmann
     genomes; fit_* their fitnesses; gnn_logits (n_g, N, 2, 3) this
-    generation's GNN posteriors (for cross-type seeding).  Returns the
-    next (gnn_pop, bz_pop) with elites in the leading rows, sorted by
-    fitness (row 0 = best).
+    generation's GNN posteriors (for cross-type seeding).  ``n_g`` /
+    ``n_b`` give the REAL sub-population sizes when the arrays carry
+    masked padding rows (fitness -inf, see
+    repro.distributed.population); default: every row is real.  Returns
+    the next (gnn_pop, bz_pop) with elites in the leading rows, sorted
+    by fitness (row 0 = best); padding rows hold throwaway children.
     """
     return _evolve_core(
         key, gnn_pop, fit_g, bz_pop, fit_b, gnn_logits,
-        n_nodes=n_nodes, n_g=gnn_pop.shape[0], n_b=bz_pop.shape[0],
+        n_nodes=n_nodes,
+        n_g=gnn_pop.shape[0] if n_g is None else n_g,
+        n_b=bz_pop.shape[0] if n_b is None else n_b,
+        n_g_pad=gnn_pop.shape[0], n_b_pad=bz_pop.shape[0],
         e_g=e_g, e_b=e_b, tournament_k=tournament_k,
         crossover_prob=crossover_prob, mut_prob=mut_prob,
         mut_frac=mut_frac, mut_std=mut_std, axis_name=None)
@@ -324,29 +389,38 @@ def evolve(key, gnn_pop, fit_g, bz_pop, fit_b, gnn_logits, *,
 def evolve_sharded(mesh, key, gnn_pop, fit_g, bz_pop, fit_b, gnn_logits, *,
                    n_nodes: int, e_g: int, e_b: int, tournament_k: int,
                    crossover_prob: float, mut_prob: float, mut_frac: float,
-                   mut_std: float) -> Tuple[jnp.ndarray, jnp.ndarray]:
+                   mut_std: float, n_g: Optional[int] = None,
+                   n_b: Optional[int] = None
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """``evolve`` with the population row-sharded over mesh axis "pop".
 
     The populations, fitness vectors and logits are sharded on their
-    leading axis; the key is replicated.  Both sub-population sizes must
-    divide the mesh's "pop" axis size (checked here — a ragged split
-    would silently desynchronize `_slot_ids`).  Bitwise equal to
-    ``evolve`` for any valid shard count.
+    leading axis; the key is replicated.  Both sub-population ROW
+    counts (padding included) must divide the mesh's "pop" axis size
+    (checked here — a ragged split would silently desynchronize
+    `_slot_ids`); non-dividing REAL sizes are handled upstream by
+    padding the populations (repro.distributed.population) and passing
+    the real sizes via ``n_g``/``n_b``.  Bitwise equal to ``evolve`` on
+    real rows for any valid shard count.
     """
-    n_g, n_b = gnn_pop.shape[0], bz_pop.shape[0]
+    n_g_pad, n_b_pad = gnn_pop.shape[0], bz_pop.shape[0]
     n_shards = mesh.shape[POP_AXIS]
-    if (n_g % n_shards) or (n_b % n_shards):
+    if (n_g_pad % n_shards) or (n_b_pad % n_shards):
         raise ValueError(
-            f"population split (n_g={n_g}, n_b={n_b}) not divisible by "
-            f"mesh '{POP_AXIS}' axis ({n_shards}); pick pop_size/"
-            f"boltzmann_frac so both sub-populations divide the shard "
-            f"count, or disable sharding (REPRO_POP_SHARDS=1)")
+            f"population rows (n_g={n_g_pad}, n_b={n_b_pad}) not "
+            f"divisible by mesh '{POP_AXIS}' axis ({n_shards}); pad the "
+            f"populations (repro.distributed.population does this for "
+            f"you) or disable sharding (REPRO_POP_SHARDS=1)")
     pop = PartitionSpec(POP_AXIS)
     rep = PartitionSpec()
-    fn = partial(_evolve_core, n_nodes=n_nodes, n_g=n_g, n_b=n_b,
+    fn = partial(_evolve_core, n_nodes=n_nodes,
+                 n_g=n_g_pad if n_g is None else n_g,
+                 n_b=n_b_pad if n_b is None else n_b,
+                 n_g_pad=n_g_pad, n_b_pad=n_b_pad,
                  e_g=e_g, e_b=e_b, tournament_k=tournament_k,
                  crossover_prob=crossover_prob, mut_prob=mut_prob,
-                 mut_frac=mut_frac, mut_std=mut_std, axis_name=POP_AXIS)
+                 mut_frac=mut_frac, mut_std=mut_std, axis_name=POP_AXIS,
+                 axis_size=n_shards)
     sharded = shard_map(fn, mesh=mesh,
                         in_specs=(rep, pop, pop, pop, pop, pop),
                         out_specs=(pop, pop), check_rep=False)

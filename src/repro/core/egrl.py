@@ -22,10 +22,13 @@ tracking and logging.  The seed implementation instead kept a Python
 list of per-individual genomes: building each child ran 1-3 host RNG
 ops plus device transfers, serializing the inner loop.
 
-Population sharding (PR 2): when more than one device is visible and the
-population split divides the device count (see
-repro.distributed.population for the REPRO_POP_SHARDS policy), the
-stacked genome arrays carry a NamedSharding over a 1-D ("pop",) mesh.
+Population sharding (PR 2, padding PR 3): when more than one device is
+visible (see repro.distributed.population for the REPRO_POP_SHARDS
+policy), the stacked genome arrays carry a NamedSharding over a 1-D
+("pop",) mesh; sub-populations that do not divide the shard count are
+padded with masked rows (-inf fitness, PRNG draws sized by the real
+counts) so the real-row trajectory still matches the unpadded
+single-device run bit for bit.
 The GNN forward, rollout sampling and simulator evaluation then
 partition automatically under jit (per-genome work is independent),
 while the EA step runs ea.evolve_sharded — shard-local
@@ -37,12 +40,22 @@ pure capacity/throughput knob, not a different algorithm.
 
 Modes: "egrl" (full), "ea" (ablate PG), "pg" (ablate EA) — the paper's
 baseline agents.
+
+Multi-workload training (PR 3): ``ZooEGRL`` evolves ONE population
+against a whole ``GraphBatch`` — per-generation fitness is a selectable
+aggregate (mean / worst-case, ``REPRO_FITNESS_AGG``) of per-graph
+rewards, evaluated zoo-wide in a single jitted device call
+(memsim.batch.evaluate_population_zoo).  GNN genomes transfer unchanged
+(their parameters are graph-size independent); Boltzmann genomes span
+the padded (G · N_max) node grid.  The SAC learner is per-graph, so
+ZooEGRL is EA-only for now (see ROADMAP).
 """
 from __future__ import annotations
 
 import dataclasses
+import os
 from functools import partial
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
@@ -55,9 +68,119 @@ from repro.core import gnn
 from repro.core.replay import ReplayBuffer
 from repro.core.sac import SACConfig, SACLearner
 from repro.distributed.population import resolve_pop_sharding
+from repro.graphs.batch import GraphBatch, build_graph_batch
 from repro.graphs.graph import WorkloadGraph
+from repro.memsim.batch import aggregate_rewards, evaluate_population_zoo
 from repro.memsim.compiler import compiler_reference
 from repro.memsim.simulator import build_sim_graph, evaluate_population
+
+
+def _pad_rows(x: jnp.ndarray, rows: int) -> jnp.ndarray:
+    """Extend a stacked (P, ...) array with zero rows up to ``rows``."""
+    if x.shape[0] == rows:
+        return x
+    pad = jnp.zeros((rows - x.shape[0],) + x.shape[1:], x.dtype)
+    return jnp.concatenate([x, pad])
+
+
+def _pad_keys(keys: jnp.ndarray, rows: int) -> jnp.ndarray:
+    """Extend a (P, 2) key array to ``rows`` by repeating the last key
+    (padding rows sample throwaway mappings that are never consumed),
+    WITHOUT touching the split stream of the real rows — split(k, n)
+    has no prefix property, so the caller must split with the REAL
+    count."""
+    if keys.shape[0] == rows:
+        return keys
+    rep = jnp.broadcast_to(keys[-1:], (rows - keys.shape[0],)
+                           + keys.shape[1:])
+    return jnp.concatenate([keys, rep])
+
+
+def _evolve_with_fitness_mask(evolve_fn, n_g, n_g_pad, n_b, n_b_pad,
+                              key, gnn_pop, fit_g, bz_pop, fit_b, logits):
+    """Pin padding rows' fitness to -inf before the EA step.  Jitted
+    together with the evolve call so a ("pop",)-sharded fitness vector
+    stays sharded through the mask."""
+    if n_g_pad > n_g:
+        fit_g = jnp.where(jnp.arange(n_g_pad) < n_g, fit_g, -jnp.inf)
+    if n_b_pad > n_b:
+        fit_b = jnp.where(jnp.arange(n_b_pad) < n_b, fit_b, -jnp.inf)
+    return evolve_fn(key, gnn_pop, fit_g, bz_pop, fit_b, logits)
+
+
+class _EvoPopulation:
+    """Shared population scaffolding for the per-graph ``EGRL`` and the
+    multi-workload ``ZooEGRL``: the fixed-slot population split + elite
+    formulas, stacked-genome init, sharded/padded placement, and the
+    jitted evolve wiring.  Keeping this in ONE place means a fix to
+    e.g. the padding discipline applies to both drivers.
+
+    The subclass must set ``self.cfg``, ``self.mode``, ``self.key`` and
+    ``self._template`` before calling ``_init_populations`` — note the
+    PRNG contract: EGRL's template is the SAC actor (no key consumed),
+    ZooEGRL draws one key for its template first.
+    """
+
+    def _k(self):
+        self.key, k = jax.random.split(self.key)
+        return k
+
+    def _split_population(self):
+        """Fixed encoding slots (see core/ea.py): n_b Boltzmann + n_g
+        GNN genomes whose counts never change; elites split
+        proportionally."""
+        cfg = self.cfg
+        if self.mode == "pg":
+            self.n_g = self.n_b = 0
+        else:
+            self.n_b = max(1, int(round(cfg.pop_size * cfg.boltzmann_frac)))
+            self.n_g = cfg.pop_size - self.n_b
+        self.e_g = min(self.n_g, max(1, round(
+            cfg.elites * self.n_g / max(cfg.pop_size, 1)))) if self.n_g else 0
+        self.e_b = min(self.n_b, max(0, cfg.elites - self.e_g))
+
+    def _init_populations(self, n_features: int, bz_nodes: int, pop_shards):
+        """Stacked genome arrays (GNN: (n_g, V) flat params; Boltzmann:
+        (n_b, F) flats over ``bz_nodes`` node slots), their placement —
+        single device, or row-sharded over a ("pop",) mesh per the
+        repro.distributed.population policy — and the jitted evolve
+        call.  A shard count that does not divide a sub-population is
+        handled by padding with masked rows: zero genomes whose fitness
+        the evolve wrapper pins to -inf, invisible to the real-row
+        trajectory."""
+        cfg = self.cfg
+        vec0 = gnn.flatten_params(self._template)
+        self.gnn_pop = (jnp.stack([
+            gnn.flatten_params(gnn.init_gnn(self._k(), n_features))
+            for _ in range(self.n_g)]) if self.n_g
+            else jnp.zeros((0, vec0.shape[0])))
+        self.bz_pop = (jnp.stack([
+            bz.to_flat(*bz.init_boltzmann(self._k(), bz_nodes))
+            for _ in range(self.n_b)]) if self.n_b
+            else jnp.zeros((0, bz.flat_size(bz_nodes))))
+
+        self.pop_sharding = resolve_pop_sharding(
+            self.n_g, self.n_b, pop_shards)
+        self.n_g_pad, self.n_b_pad = self.pop_sharding.padded(
+            self.n_g, self.n_b)
+        self.gnn_pop = self.pop_sharding.put(
+            _pad_rows(self.gnn_pop, self.n_g_pad))
+        self.bz_pop = self.pop_sharding.put(
+            _pad_rows(self.bz_pop, self.n_b_pad))
+
+        ea_kwargs = dict(
+            n_nodes=bz_nodes, e_g=self.e_g, e_b=self.e_b, n_g=self.n_g,
+            n_b=self.n_b, tournament_k=cfg.tournament_k,
+            crossover_prob=cfg.crossover_prob, mut_prob=cfg.mut_prob,
+            mut_frac=cfg.mut_frac, mut_std=cfg.mut_std)
+        if self.pop_sharding.active:
+            base_evolve = partial(
+                ea_mod.evolve_sharded, self.pop_sharding.mesh, **ea_kwargs)
+        else:
+            base_evolve = partial(ea_mod.evolve, **ea_kwargs)
+        self._evolve = jax.jit(partial(
+            _evolve_with_fitness_mask, base_evolve,
+            self.n_g, self.n_g_pad, self.n_b, self.n_b_pad))
 
 
 @dataclasses.dataclass
@@ -78,7 +201,7 @@ class EGRLConfig:
     sac: SACConfig = dataclasses.field(default_factory=SACConfig)
 
 
-class EGRL:
+class EGRL(_EvoPopulation):
     def __init__(self, graph: WorkloadGraph, cfg: EGRLConfig = EGRLConfig(),
                  mode: str = "egrl", pop_shards=None):
         """``pop_shards`` overrides the REPRO_POP_SHARDS policy (int,
@@ -99,32 +222,9 @@ class EGRL:
         self.buffer = ReplayBuffer(graph.n, seed=cfg.seed)
         self._template = self.learner.actor
 
-        # ---- stacked populations (fixed encoding slots, see core/ea.py)
-        if mode == "pg":
-            self.n_g = self.n_b = 0
-        else:
-            self.n_b = max(1, int(round(cfg.pop_size * cfg.boltzmann_frac)))
-            self.n_g = cfg.pop_size - self.n_b
-        self.e_g = min(self.n_g, max(1, round(
-            cfg.elites * self.n_g / max(cfg.pop_size, 1)))) if self.n_g else 0
-        self.e_b = min(self.n_b, max(0, cfg.elites - self.e_g))
-
-        vec0 = gnn.flatten_params(self._template)
-        self.gnn_pop = (jnp.stack([
-            gnn.flatten_params(gnn.init_gnn(self._k(), self.feats.shape[1]))
-            for _ in range(self.n_g)]) if self.n_g
-            else jnp.zeros((0, vec0.shape[0])))
-        self.bz_pop = (jnp.stack([
-            bz.to_flat(*bz.init_boltzmann(self._k(), graph.n))
-            for _ in range(self.n_b)]) if self.n_b
-            else jnp.zeros((0, bz.flat_size(graph.n))))
-
-        # ---- population placement: single device, or row-sharded over a
-        # ("pop",) mesh (repro.distributed.population policy)
-        self.pop_sharding = resolve_pop_sharding(
-            self.n_g, self.n_b, pop_shards)
-        self.gnn_pop = self.pop_sharding.put(self.gnn_pop)
-        self.bz_pop = self.pop_sharding.put(self.bz_pop)
+        # ---- stacked populations + placement + evolve (_EvoPopulation)
+        self._split_population()
+        self._init_populations(self.feats.shape[1], graph.n, pop_shards)
 
         # ---- vmapped population programs (auto-SPMD over sharded pops)
         feats, adj = self.feats, self.adj
@@ -134,32 +234,18 @@ class EGRL:
             jax.vmap(lambda k, lg: gnn.sample_actions(k, lg)))
         self._pop_boltz = jax.jit(jax.vmap(
             lambda k, f: bz.sample(k, bz.from_flat(f, graph.n))))
-        ea_kwargs = dict(
-            n_nodes=graph.n, e_g=self.e_g, e_b=self.e_b,
-            tournament_k=cfg.tournament_k, crossover_prob=cfg.crossover_prob,
-            mut_prob=cfg.mut_prob, mut_frac=cfg.mut_frac, mut_std=cfg.mut_std)
-        if self.pop_sharding.active:
-            self._evolve = jax.jit(partial(
-                ea_mod.evolve_sharded, self.pop_sharding.mesh, **ea_kwargs))
-            # PG migration: jitted row write that lands back in the
-            # population sharding (a collective scatter, not a host copy)
-            self._migrate = jax.jit(
-                lambda pop, vec: pop.at[self.n_g - 1].set(vec),
-                out_shardings=self.pop_sharding.sharding)
-        else:
-            self._evolve = jax.jit(partial(ea_mod.evolve, **ea_kwargs))
-            self._migrate = jax.jit(
-                lambda pop, vec: pop.at[self.n_g - 1].set(vec))
+        # PG migration: jitted row write into the last REAL GNN slot; on
+        # a sharded population it lands back in the population sharding
+        # (a collective scatter, not a host copy)
+        self._migrate = jax.jit(
+            lambda pop, vec: pop.at[self.n_g - 1].set(vec),
+            **({"out_shardings": self.pop_sharding.sharding}
+               if self.pop_sharding.active else {}))
 
         self.steps = 0
         self.best_reward = -np.inf
         self.best_mapping: Optional[np.ndarray] = None
         self.history: List[Dict] = []
-
-    # ------------------------------------------------------------ helpers
-    def _k(self):
-        self.key, k = jax.random.split(self.key)
-        return k
 
     # --------------------------------------------------------- generation
     def generation(self) -> Dict:
@@ -176,14 +262,18 @@ class EGRL:
         # math is row-independent, so the rewards are bitwise the same
         # as one fused call.
         parts, results = {}, {}
+        # rows beyond these are masked padding slots (divisible sharding)
+        real = {"g": n_g, "b": n_b}
         logits_g = None
         if n_g:
             logits_g = self._pop_gnn_logits(self.gnn_pop)
-            parts["g"] = self._pop_sample(
-                jax.random.split(self._k(), n_g), logits_g)
+            # keys are split with the REAL count (split(k, n) has no
+            # prefix property) and repeated into the padding rows
+            parts["g"] = self._pop_sample(_pad_keys(
+                jax.random.split(self._k(), n_g), self.n_g_pad), logits_g)
         if n_b:
-            parts["b"] = self._pop_boltz(
-                jax.random.split(self._k(), n_b), self.bz_pop)
+            parts["b"] = self._pop_boltz(_pad_keys(
+                jax.random.split(self._k(), n_b), self.n_b_pad), self.bz_pop)
         if self.mode != "ea":
             parts["pg"] = self.learner.explore_actions(cfg.pg_rollouts)
         for name, maps in parts.items():
@@ -203,11 +293,18 @@ class EGRL:
                 else jnp.zeros((0, self.g.n, 2, 3)))
 
         # ---- the ONE host sync per generation: buffer + logging
+        # (padding rows are sliced away — they never hit the buffer,
+        # the step count or the best-mapping tracking)
+        def np_real(name, x):
+            a = np.asarray(x)
+            return a[:real[name]] if name in real else a
+
         rewards = np.concatenate(
-            [np.asarray(results[n]["reward"]) for n in parts])
-        maps_np = np.concatenate([np.asarray(m) for m in parts.values()])
+            [np_real(n, results[n]["reward"]) for n in parts])
+        maps_np = np.concatenate(
+            [np_real(n, m) for n, m in parts.items()])
         valid = np.concatenate(
-            [np.asarray(results[n]["valid"]) for n in parts])
+            [np_real(n, results[n]["valid"]) for n in parts])
         self.steps += len(maps_np)
         self.buffer.add_batch(maps_np, rewards)
         gen_best = int(np.argmax(rewards))
@@ -268,6 +365,155 @@ class EGRL:
         if self.n_g:
             return np.asarray(self.gnn_pop[0])
         return np.asarray(gnn.flatten_params(self.learner.actor))
+
+
+class ZooEGRL(_EvoPopulation):
+    """Multi-workload EGRL: one EA population trained against the whole
+    workload zoo, every generation scored in a single jitted device call.
+
+    The graphs are stacked into a padded ``GraphBatch``; per-genome
+    mappings are (G, N_max, 2) and ``evaluate_population_zoo`` returns
+    per-graph rewards (P, G), folded into one fitness scalar per genome
+    by ``fitness_agg``:
+
+    - ``"mean"`` — average reward across the zoo (generalist);
+    - ``"worst"`` — minimax: the weakest graph's reward, so evolution
+      cannot trade one workload off against another.
+
+    GNN genomes are the same (V,) flat parameter vectors as the
+    per-graph ``EGRL`` (Graph U-Net weights are graph-size independent;
+    the batched forward masks padding, see core.gnn.gnn_forward_zoo), so
+    populations transfer between per-graph and zoo training.  Boltzmann
+    genomes span the padded G·N_max node grid — one prior/temperature
+    table per (graph, node) slot — reusing the flat encoding with
+    ``n_nodes = G * N_max``.
+
+    EA-mode only: the SAC learner's critic is tied to one graph's
+    feature/adjacency tensors, so PG rollouts and migration are a
+    follow-up (ROADMAP).  Composes with the ("pop",) population
+    sharding exactly like ``EGRL`` — all per-genome work is
+    row-independent and the EA step handles padded slots.
+    """
+
+    def __init__(self, graphs: Sequence[WorkloadGraph],
+                 cfg: EGRLConfig = EGRLConfig(), mode: str = "ea",
+                 fitness_agg: Optional[str] = None, pop_shards=None,
+                 batch: Optional[GraphBatch] = None):
+        if mode != "ea":
+            raise NotImplementedError(
+                "ZooEGRL is EA-only: the SAC learner is per-graph "
+                "(see ROADMAP 'multi-workload learner')")
+        self.mode = mode
+        self.cfg = cfg
+        self.agg = (fitness_agg
+                    or os.environ.get("REPRO_FITNESS_AGG", "mean"))
+        if self.agg not in ("mean", "worst"):
+            raise ValueError(
+                f"REPRO_FITNESS_AGG={self.agg!r} (use 'mean' or 'worst')")
+        self.batch = batch if batch is not None else build_graph_batch(graphs)
+        self.n_graphs, self.n_max = self.batch.n_graphs, self.batch.n_max
+        self.n_eff = self.n_graphs * self.n_max    # Boltzmann node grid
+        self.key = jax.random.PRNGKey(cfg.seed)
+
+        n_features = self.batch.feats.shape[-1]
+        self._template = gnn.init_gnn(self._k(), n_features)
+        # ---- stacked populations + placement + evolve (_EvoPopulation)
+        self._split_population()
+        self._init_populations(n_features, self.n_eff, pop_shards)
+
+        gb = self.batch
+        self._pop_logits = jax.jit(lambda pop: gnn.population_logits_zoo(
+            self._template, gb.feats, gb.adj, gb.node_mask, gb.n_nodes,
+            pop))
+        # one key per genome samples all G graphs' sub-actions at once
+        self._pop_sample = jax.jit(
+            jax.vmap(lambda k, lg: gnn.sample_actions(k, lg)))
+        self._pop_boltz = jax.jit(jax.vmap(
+            lambda k, f: bz.sample(k, bz.from_flat(f, self.n_eff)).reshape(
+                self.n_graphs, self.n_max, 2)))
+
+        self.steps = 0
+        self.best_reward = np.full(self.n_graphs, -np.inf)
+        self.best_mapping: List[Optional[np.ndarray]] = [None] * self.n_graphs
+        self.best_fitness = -np.inf
+        self.history: List[Dict] = []
+
+    def generation(self) -> Dict:
+        cfg = self.cfg
+        n_g, n_b = self.n_g, self.n_b
+        parts, results = {}, {}
+        real = {"g": n_g, "b": n_b}
+        logits_g = None
+        if n_g:
+            logits_g = self._pop_logits(self.gnn_pop)  # (P, G, Nmax, 2, 3)
+            parts["g"] = self._pop_sample(_pad_keys(
+                jax.random.split(self._k(), n_g), self.n_g_pad), logits_g)
+        if n_b:
+            parts["b"] = self._pop_boltz(_pad_keys(
+                jax.random.split(self._k(), n_b), self.n_b_pad), self.bz_pop)
+        for name, maps in parts.items():   # maps (P_pad, G, N_max, 2)
+            results[name] = evaluate_population_zoo(
+                self.batch, maps, cfg.reward_scale)
+
+        # ---- EA step on the aggregate fitness, still on device
+        empty = jnp.zeros((0,), jnp.float32)
+        fit = {name: aggregate_rewards(results[name]["reward"], self.agg)
+               for name in parts}
+        self.gnn_pop, self.bz_pop = self._evolve(
+            self._k(),
+            self.gnn_pop, fit.get("g", empty),
+            self.bz_pop, fit.get("b", empty),
+            logits_g.reshape(self.n_g_pad, self.n_eff, 2, 3)
+            if logits_g is not None
+            else jnp.zeros((0, self.n_eff, 2, 3)))
+
+        # ---- the ONE host sync per generation
+        def np_real(name, x):
+            return np.asarray(x)[:real[name]]
+
+        rewards = np.concatenate(    # (P, G)
+            [np_real(n, results[n]["reward"]) for n in parts])
+        fitness = np.concatenate([np_real(n, fit[n]) for n in parts])
+        valid = np.concatenate(
+            [np_real(n, results[n]["valid"]) for n in parts])
+        maps_np = np.concatenate([np_real(n, m) for n, m in parts.items()])
+        self.steps += rewards.size          # one env step per (genome, graph)
+        for gi in range(self.n_graphs):
+            b = int(np.argmax(rewards[:, gi]))
+            if rewards[b, gi] > self.best_reward[gi]:
+                self.best_reward[gi] = float(rewards[b, gi])
+                self.best_mapping[gi] = maps_np[
+                    b, gi, :int(self.batch.n_nodes[gi])].copy()
+        self.best_fitness = max(self.best_fitness, float(fitness.max()))
+        rec = {
+            "steps": self.steps,
+            "gen_best_fitness": float(fitness.max()),
+            "gen_mean_fitness": float(fitness.mean()),
+            "best_fitness": self.best_fitness,
+            "valid_frac": float(valid.mean()),
+            "best_reward_per_graph": {
+                name: float(self.best_reward[i])
+                for i, name in enumerate(self.batch.names)},
+        }
+        self.history.append(rec)
+        return rec
+
+    def train(self, total_steps: Optional[int] = None, log=None):
+        total = total_steps or self.cfg.total_steps
+        while self.steps < total:
+            rec = self.generation()
+            if log and len(self.history) % 10 == 1:
+                log(f"[zoo/{self.agg}] steps {rec['steps']:6d} "
+                    f"best fitness {rec['best_fitness']:.3f} "
+                    f"valid {rec['valid_frac']:.2f}")
+        return self.history
+
+    def best_gnn_vec(self) -> Optional[np.ndarray]:
+        """Flat params of the best GNN after a generation (row 0); usable
+        directly by the per-graph ``EGRL`` / ``evaluate_gnn_on``."""
+        if self.n_g:
+            return np.asarray(self.gnn_pop[0])
+        return None
 
 
 def evaluate_gnn_on(graph: WorkloadGraph, vec: np.ndarray,

@@ -135,6 +135,81 @@ def gnn_forward(p, feats, adj, backend: Optional[str] = None):
     return logits
 
 
+# ------------------------------------------------- padded multi-graph path
+def _pool_masked(score_w, h, adj, live, k_shared, k_real):
+    """gPool over a padded graph: top-``k_shared`` (static) slots by
+    score with dead slots ranked -inf, then only the first ``k_real``
+    (traced, the per-graph ``max(2, n // 2^level)``) kept live.
+
+    Because dead slots score -inf, the first ``k_real`` selected slots
+    are exactly the per-graph ``_pool`` selection (same scores, same
+    index tie-break), so kept rows/gates match the unpadded forward;
+    the remaining slots are zeroed and disconnected so they stay inert
+    through the following GAT level.  Returns (h_k, adj_k, idx, keep).
+    """
+    score = jnp.tanh(h @ score_w / (jnp.linalg.norm(score_w) + 1e-6))
+    score = jnp.where(live > 0, score, -jnp.inf)
+    val, idx = jax.lax.top_k(score, k_shared)
+    keep = ((jnp.arange(k_shared) < k_real) & jnp.isfinite(val)).astype(
+        h.dtype)
+    h_k = jnp.where(keep[:, None] > 0,
+                    h[idx] * jnp.where(keep > 0, val, 0.0)[:, None], 0.0)
+    adj_k = adj[idx][:, idx]
+    adj_k = jnp.where((keep[:, None] * keep[None, :]) > 0, adj_k, 0.0)
+    return h_k, adj_k, idx, keep
+
+
+def gnn_forward_masked(p, feats, adj, node_mask, n, backend=None):
+    """``gnn_forward`` over ONE padded graph: feats (N_max, F), adj
+    (N_max, N_max) with padded rows self-loop-only, node_mask (N_max,)
+    1.0 = real, n = real node count (traced).  Returns (N_max, 2, 3)
+    logits with padding rows forced to 0.
+
+    Pooling sizes are the per-graph ``max(2, n//2)`` / ``max(2, n//4)``
+    emulated inside static ``N_max``-derived top-k shapes (see
+    ``_pool_masked``), and every level re-masks its hidden rows, so real
+    -node outputs are a function of the real subgraph only: garbage in
+    padding slots cannot reach them (bitwise — the padding columns enter
+    attention with exactly-zero weights).  Numerically the real rows
+    match the unpadded ``gnn_forward`` to float tolerance, not bitwise:
+    XLA regroups the attention-axis reductions with the padded length.
+    """
+    nmax = feats.shape[0]
+    k1s, k2s = max(2, nmax // 2), max(2, nmax // 4)
+    k1r, k2r = jnp.maximum(2, n // 2), jnp.maximum(2, n // 4)
+    live = node_mask.astype(feats.dtype)
+    h = jnp.tanh((feats * live[:, None]) @ p["inp"]) * live[:, None]
+    h = _gat(p["gat0"], h, adj > 0, backend) * live[:, None]
+    h1, a1, i1, keep1 = _pool_masked(p["pool1"], h, adj, live, k1s, k1r)
+    h1 = _gat(p["gat1"], h1, a1 > 0, backend) * keep1[:, None]
+    h2, a2, i2, keep2 = _pool_masked(p["pool2"], h1, a1, keep1, k2s, k2r)
+    h2 = _gat(p["gat2"], h2, a2 > 0, backend) * keep2[:, None]
+    h1u = _unpool(h2, i2, k1s, h1)
+    h1u = _gat(p["gat3"], h1u, a1 > 0, backend) * keep1[:, None]
+    hu = _unpool(h1u, i1, nmax, h)
+    z = jax.nn.elu(hu @ p["out1"] + p["out_b1"])
+    logits = (z @ p["out2"]).reshape(nmax, N_SUB, N_TIER)
+    return jnp.where(live[:, None, None] > 0, logits, 0.0)
+
+
+def gnn_forward_zoo(p, feats, adj, node_mask, n_nodes, backend=None):
+    """Batched forward over a GraphBatch: feats (G, N_max, F) ->
+    (G, N_max, 2, 3) logits, one vmapped call for the whole zoo."""
+    return jax.vmap(lambda f, a, m, n: gnn_forward_masked(
+        p, f, a, m, n, backend))(feats, adj, node_mask, n_nodes)
+
+
+def population_logits_zoo(template, feats, adj, node_mask, n_nodes,
+                          pop_matrix, backend=None):
+    """Zoo-wide stacked-population forward: (P, V) flat params ->
+    (P, G, N_max, 2, 3).  Like ``population_logits``, the leading axis
+    is a pure vmap, so a ``("pop",)``-sharded ``pop_matrix`` partitions
+    shard-locally under auto-SPMD; the graph axis is replicated."""
+    return jax.vmap(lambda vec: gnn_forward_zoo(
+        unflatten_params(template, vec), feats, adj, node_mask, n_nodes,
+        backend))(pop_matrix)
+
+
 def greedy_actions(logits):
     return jnp.argmax(logits, axis=-1).astype(jnp.int32)  # (N, 2)
 

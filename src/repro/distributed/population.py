@@ -1,35 +1,52 @@
 """EA population sharding policy: pick a shard count, build the
-``("pop",)`` mesh, and place the stacked (P, ...) genome arrays.
+``("pop",)`` mesh, pad the populations to divisible row counts, and
+place the stacked (P, ...) genome arrays.
 
 The EGRL inner loop stores its population as stacked device arrays
 (core/egrl.py); this module decides whether those arrays live on one
 chip or are row-sharded across a 1-D device mesh.  The actual sharded
 EA step is ``repro.core.ea.evolve_sharded`` (bit-identical to the
-single-device ``evolve`` for any valid shard count); population
-evaluation and the population GNN forward partition automatically under
-jit once their inputs carry a ``NamedSharding`` (auto-SPMD — every
-per-genome computation is independent, so no collectives are needed
-outside the EA step).
+single-device ``evolve`` on real rows for any valid shard count);
+population evaluation and the population GNN forward partition
+automatically under jit once their inputs carry a ``NamedSharding``
+(auto-SPMD — every per-genome computation is independent, so no
+collectives are needed outside the EA step).
+
+Padded slots (PR 3): a shard count that does not divide a
+sub-population no longer forces the single-device fallback.  The
+resolver rounds each sub-population up to the next multiple of the
+shard count and reports the padded row counts (``n_g_pad``/
+``n_b_pad``); the EGRL driver allocates those extra masked rows, feeds
+them ``-inf`` fitness, and sizes every PRNG draw by the REAL counts, so
+the real-row trajectory stays bit-identical to the unpadded
+single-device run (tests/test_ea_sharding.py).  Padding rows cost only
+their share of redundant evaluation work, never correctness.
 
 Shard-count policy (``REPRO_POP_SHARDS`` env var, or the ``pop_shards``
 argument to ``EGRL``):
 
-- ``"auto"`` (default): the largest device count that divides BOTH
-  sub-population sizes (n_g GNN genomes, n_b Boltzmann genomes) — a
-  ragged split would break the slot arithmetic that makes the sharded
-  EA bit-identical.  On a single-device host this resolves to 1, i.e.
-  the plain single-device path, so CPU tests and benchmarks are
-  unaffected.
+- ``"auto"`` (default): all visible devices, capped at the larger
+  sub-population size (a shard with zero real rows in BOTH
+  sub-populations would be pure waste).  On a single-device host this
+  resolves to 1, i.e. the plain single-device path, so CPU tests and
+  benchmarks are unaffected.  Note the deliberate trade-off: maximizing
+  shards minimizes per-generation WALL time (per-shard row counts never
+  grow with more shards; padding rows run on otherwise-idle devices in
+  parallel with real work) but can inflate total FLOPs when a small
+  sub-population is padded far up (e.g. n_b=3 over 13 shards evaluates
+  10 throwaway Boltzmann rollouts per generation — concurrently, but
+  they still burn energy).  Pass an explicit shard count when total
+  compute matters more than latency.
 - ``"1"`` / ``"0"`` / ``"off"``: force the single-device path.
-- an integer > 1: shard over exactly that many devices; raises
-  ``ValueError`` (fail loudly, never silently fall back) when it does
-  not divide both sub-population sizes or exceeds the device count.
+- an integer > 1: shard over exactly that many devices (padding as
+  needed); raises ``ValueError`` only when it exceeds the visible
+  device count.
 """
 from __future__ import annotations
 
 import dataclasses
 import os
-from typing import Optional, Union
+from typing import Optional, Tuple, Union
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec
@@ -38,11 +55,18 @@ from repro.core.ea import POP_AXIS
 from repro.launch.mesh import make_pop_mesh
 
 
+def _round_up(n: int, m: int) -> int:
+    return ((n + m - 1) // m) * m
+
+
 @dataclasses.dataclass(frozen=True)
 class PopSharding:
     """Resolved placement for the stacked population arrays."""
     mesh: Optional[Mesh]    # None => single-device path
     n_shards: int
+    # padded global row counts (None => no padding, rows == real sizes)
+    n_g_pad: Optional[int] = None
+    n_b_pad: Optional[int] = None
 
     @property
     def active(self) -> bool:
@@ -57,6 +81,11 @@ class PopSharding:
     def put(self, x):
         """Place a stacked (P, ...) array (no-op when unsharded)."""
         return jax.device_put(x, self.sharding) if self.active else x
+
+    def padded(self, n_g: int, n_b: int) -> Tuple[int, int]:
+        """Row counts the population arrays must be allocated with."""
+        return (self.n_g_pad if self.n_g_pad is not None else n_g,
+                self.n_b_pad if self.n_b_pad is not None else n_b)
 
 
 def resolve_pop_sharding(n_g: int, n_b: int,
@@ -74,8 +103,7 @@ def resolve_pop_sharding(n_g: int, n_b: int,
         return PopSharding(None, 1)
     n_dev = len(jax.devices())
     if req in ("auto", ""):
-        n = max(d for d in range(1, n_dev + 1)
-                if n_g % d == 0 and n_b % d == 0)
+        n = min(n_dev, max(n_g, n_b, 1))
     elif req in ("0", "1", "off"):
         n = 1
     else:
@@ -83,12 +111,8 @@ def resolve_pop_sharding(n_g: int, n_b: int,
         if n > n_dev:
             raise ValueError(
                 f"REPRO_POP_SHARDS={n} but only {n_dev} device(s) visible")
-        if n_g % n or n_b % n:
-            raise ValueError(
-                f"REPRO_POP_SHARDS={n} does not divide the population "
-                f"split (n_g={n_g}, n_b={n_b}); pick pop_size/"
-                f"boltzmann_frac so both sub-populations are multiples "
-                f"of the shard count")
     if n <= 1:
         return PopSharding(None, 1)
-    return PopSharding(make_pop_mesh(n), n)
+    return PopSharding(make_pop_mesh(n), n,
+                       _round_up(n_g, n) if n_g else 0,
+                       _round_up(n_b, n) if n_b else 0)

@@ -1,0 +1,174 @@
+"""Padded multi-graph IR: stack heterogeneous ``WorkloadGraph``s into one
+``GraphBatch`` so a policy (or a whole EA population) can be evaluated
+against the entire workload zoo in a single device call.
+
+Each graph is padded to the batch-wide ``N_max`` with *inert* nodes:
+zero weight/activation bytes, zero FLOPs, no producers, and
+``last_consumer == t`` (self-releasing, so they never touch the release
+ring).  The rectifier's scan steps over padding are then IEEE identities
+(``x - 0 == x``, ``moved + 0 == moved``) — no masking inside the scan is
+needed, and the batched path stays bit-exact against the per-graph
+``memsim.simulator`` path and the numpy oracle (see
+``tests/test_graph_batch.py``).  Three pieces of padding discipline make
+that exactness hold:
+
+- the release-credit ring is sized by the batch-wide maximum activation
+  lifetime ``W_max``; a per-graph lifetime never exceeds its own W ≤
+  W_max, so every credit push still lands strictly before its pop and
+  the float accumulation order is unchanged;
+- the eps denominator ``total_bytes`` rides in the stacked ``SimGraph``
+  (host-precomputed per graph in the oracle's summation order) — a
+  device reduction over the padded axis would regroup the adds;
+- ``latency`` reduces its per-node terms strictly left-to-right
+  (``simulator._seq_sum``), so the node mask's trailing zeros are
+  identities too.
+
+The GNN-facing arrays (Table-1 features, row-normalized adjacency) are
+padded with zero feature rows and self-loop-only adjacency rows, keeping
+padded nodes disconnected from real ones; ``core.gnn.gnn_forward_zoo``
+masks them out of attention and pooling.
+
+``GraphBatch`` is a registered pytree (names are static metadata), so it
+can be passed straight into jitted functions.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.graphs.graph import WorkloadGraph
+from repro.memsim import tiers as T
+from repro.memsim.simulator import (SimGraph, build_release_idx,
+                                    total_bytes_np)
+
+
+@dataclasses.dataclass(frozen=True)
+class GraphBatch:
+    """G workloads padded to (G, N_max); see the module docstring."""
+    sim: SimGraph              # every field stacked to (G, N_max, ...) /
+    #                            ring_init (G, W_max, N_TIERS)
+    node_mask: jnp.ndarray     # (G, N_max) float32: 1.0 = real node
+    n_nodes: jnp.ndarray       # (G,) int32 real node counts
+    ref_latency: jnp.ndarray   # (G,) float32 compiler-reference latency
+    feats: jnp.ndarray         # (G, N_max, F) Table-1 features, 0-padded
+    adj: jnp.ndarray           # (G, N_max, N_max) row-normalized; padded
+    #                            rows are self-loop-only (disconnected)
+    names: Tuple[str, ...]     # static metadata
+
+    @property
+    def n_graphs(self) -> int:
+        return self.node_mask.shape[0]
+
+    @property
+    def n_max(self) -> int:
+        return self.node_mask.shape[1]
+
+    def graph_sim(self, i: int) -> SimGraph:
+        """The i-th graph's padded SimGraph slice (host-side helper for
+        tests/tools that want to run the per-graph path or the numpy
+        oracle on exactly what the batch evaluates)."""
+        return jax.tree.map(lambda x: x[i], self.sim)
+
+
+jax.tree_util.register_dataclass(
+    GraphBatch,
+    data_fields=["sim", "node_mask", "n_nodes", "ref_latency", "feats",
+                 "adj"],
+    meta_fields=["names"])
+
+
+def _padded_sim_arrays(g: WorkloadGraph, arr: dict, n_max: int,
+                       w_max: int, max_in: int):
+    """Numpy arrays of one graph padded to the batch-wide shapes.
+    ``release_idx`` is returned at the graph's native fan-in width; the
+    caller pads it to the batch maximum."""
+    n = g.n
+
+    def pad1(x, fill=0.0, dtype=np.float32):
+        out = np.full(n_max, fill, dtype)
+        out[:n] = x
+        return out
+
+    last = np.arange(n_max, dtype=np.int32)       # pads self-consume
+    last[:n] = arr["last_consumer"].astype(np.int32)
+    in_acts = -np.ones((n_max, max_in), np.int32)
+    for i, ps in enumerate(arr["producers_of"]):
+        in_acts[i, :len(ps)] = ps
+    t_arr = np.arange(n_max, dtype=np.int32)
+    return dict(
+        weight_bytes=pad1(arr["weight_bytes"]),
+        weight_frac=pad1(arr["weight_frac"]),
+        act_bytes=pad1(arr["act_bytes"]),
+        flops=pad1(arr["flops"]),
+        last_consumer=last,
+        in_acts=in_acts,
+        release_idx=build_release_idx(last),      # (n_max, native k)
+        ring_t=(t_arr % w_max).astype(np.int32),
+        ring_lc=(last % w_max).astype(np.int32),
+        self_release=(last == t_arr).astype(np.float32),
+        ring_init=np.zeros((w_max, T.N_TIERS), np.float32),
+        total_bytes=total_bytes_np(arr["weight_bytes"], arr["act_bytes"]),
+    )
+
+
+def build_graph_batch(graphs: Sequence[WorkloadGraph],
+                      n_max: int = None) -> GraphBatch:
+    """Stack heterogeneous workloads into one padded GraphBatch.
+
+    ``n_max`` optionally over-pads beyond the largest graph (used by the
+    padding-invariance tests); it must be >= max(g.n).
+    """
+    from repro.memsim.compiler import compiler_reference
+
+    assert graphs, "empty graph batch"
+    arrs = [g.arrays() for g in graphs]           # one host pass per graph
+    largest = max(g.n for g in graphs)
+    n_max = largest if n_max is None else n_max
+    assert n_max >= largest, (n_max, largest)
+    max_in = max(1, max((len(p) for arr in arrs
+                         for p in arr["producers_of"]), default=0))
+    w_max = max(int((arr["last_consumer"] - np.arange(g.n)).max()) + 1
+                for g, arr in zip(graphs, arrs))
+    per_graph = [_padded_sim_arrays(g, arr, n_max, w_max, max_in)
+                 for g, arr in zip(graphs, arrs)]
+    max_release = max(p["release_idx"].shape[1] for p in per_graph)
+    for p in per_graph:
+        ridx = p["release_idx"]
+        p["release_idx"] = np.concatenate(
+            [ridx, -np.ones((n_max, max_release - ridx.shape[1]),
+                            np.int32)], axis=1)
+
+    def stack(field):
+        return jnp.asarray(np.stack([p[field] for p in per_graph]))
+
+    sim = SimGraph(
+        stack("weight_bytes"), stack("weight_frac"), stack("act_bytes"),
+        stack("flops"), stack("last_consumer"), stack("in_acts"),
+        stack("release_idx"), stack("ring_t"), stack("ring_lc"),
+        stack("self_release"), stack("ring_init"), stack("total_bytes"))
+
+    node_mask = np.zeros((len(graphs), n_max), np.float32)
+    feats = np.zeros((len(graphs), n_max, graphs[0].features().shape[1]),
+                     np.float32)
+    adj = np.zeros((len(graphs), n_max, n_max), np.float32)
+    ref = np.zeros(len(graphs), np.float32)
+    for i, g in enumerate(graphs):
+        node_mask[i, :g.n] = 1.0
+        feats[i, :g.n] = g.features()
+        adj[i, :g.n, :g.n] = g.adjacency()
+        adj[i, np.arange(g.n, n_max), np.arange(g.n, n_max)] = 1.0
+        _, ref[i] = compiler_reference(g)
+    return GraphBatch(
+        sim=sim,
+        node_mask=jnp.asarray(node_mask),
+        n_nodes=jnp.asarray([g.n for g in graphs], jnp.int32),
+        ref_latency=jnp.asarray(ref),
+        feats=jnp.asarray(feats),
+        adj=jnp.asarray(adj),
+        names=tuple(g.name for g in graphs),
+    )

@@ -129,4 +129,129 @@ def bert(seq: int = 384, layers: int = 12, d: int = 768,
     return g
 
 
+# ------------------------------------------------- beyond-paper workloads
+# 1k+-node synthetic graphs exercising the O(N * W) ring rectifier and
+# the padded GraphBatch path at the scale they were built for (ROADMAP
+# "larger-than-BERT workloads").  Both are op-granular like the paper
+# graphs; node counts are asserted >= 1000 in tests/test_zoo_egrl.py.
+
+def moe_transformer(seq: int = 256, layers: int = 26, d: int = 1024,
+                    heads: int = 8, experts: int = 8,
+                    top_k: int = 2) -> WorkloadGraph:
+    """Deep MoE decoder stack, per-head attention ops (~40 nodes/layer,
+    1043 nodes at the defaults).  Expert banks are weight-heavy but
+    stream only ``top_k / experts`` of their bytes per inference
+    (``weight_access_frac``), the placement trade-off that makes MoE
+    interesting for a memory mapper: huge cold weights vs hot router
+    activations."""
+    nodes: List[Node] = []
+    edges: List[Tuple[int, int]] = []
+
+    def add(node: Node, srcs: List[int]) -> int:
+        idx = len(nodes)
+        nodes.append(node)
+        for s in srcs:
+            edges.append((s, idx))
+        return idx
+
+    hd = d // heads
+    ffd = 4 * d
+    i = add(Node(op="embed", weight_bytes=2.0 * 50304 * d, ifm=(seq, 1, 1),
+                 ofm=(seq, 1, d), flops=seq * d,
+                 weight_access_frac=seq / 50304.0), [])
+    i = add(Node(op="norm_proj", weight_bytes=2.0 * 2 * d, ifm=(seq, 1, d),
+                 ofm=(seq, 1, d), flops=5.0 * seq * d), [i])
+    for _ in range(layers):
+        inp = i
+        qkv = [add(Node(op="qkv", weight_bytes=2.0 * d * d, ifm=(seq, 1, d),
+                        ofm=(seq, 1, d), flops=2.0 * seq * d * d), [inp])
+               for _ in range(3)]
+        q, k, v = qkv
+        head_outs = []
+        for _ in range(heads):
+            s_ = add(Node(op="attn", ifm=(seq, 1, hd), ofm=(seq, seq, 1),
+                          flops=2.0 * seq * seq * hd, groups=heads), [q, k])
+            sm = add(Node(op="softmax", ifm=(seq, seq, 1), ofm=(seq, seq, 1),
+                          flops=5.0 * seq * seq), [s_])
+            av = add(Node(op="attn", ifm=(seq, seq, 1), ofm=(seq, 1, hd),
+                          flops=2.0 * seq * seq * hd), [sm, v])
+            head_outs.append(av)
+        o = add(Node(op="o_proj", weight_bytes=2.0 * d * d, ifm=(seq, 1, d),
+                     ofm=(seq, 1, d), flops=2.0 * seq * d * d), head_outs)
+        n1 = add(Node(op="norm_proj", weight_bytes=2.0 * 2 * d,
+                      ifm=(seq, 1, d), ofm=(seq, 1, d), flops=5.0 * seq * d),
+                 [o, inp])
+        router = add(Node(op="moe_router", weight_bytes=2.0 * d * experts,
+                          ifm=(seq, 1, d), ofm=(seq, 1, experts),
+                          flops=2.0 * seq * d * experts), [n1])
+        bank = [add(Node(op="expert_bank",
+                         weight_bytes=2.0 * 2 * d * ffd,
+                         ifm=(seq, 1, d), ofm=(seq, 1, d),
+                         flops=2.0 * seq * d * ffd * 2 * top_k / experts,
+                         weight_access_frac=top_k / experts),
+                    [n1, router]) for _ in range(experts)]
+        comb = add(Node(op="add", ifm=(seq, 1, d), ofm=(seq, 1, d),
+                        flops=seq * d * top_k), bank)
+        i = add(Node(op="norm_proj", weight_bytes=2.0 * 2 * d,
+                     ifm=(seq, 1, d), ofm=(seq, 1, d), flops=5.0 * seq * d),
+                [comb, n1])
+    add(Node(op="lm_head", weight_bytes=2.0 * d * 50304, ifm=(seq, 1, d),
+             ofm=(1, 1, 50304), flops=2.0 * d * 50304), [i])
+    g = WorkloadGraph("moe_transformer", nodes, edges)
+    g.validate()
+    return g
+
+
+def dense_cnn(blocks: int = 8, layers_per_block: int = 62,
+              growth: int = 32, hw: int = 28) -> WorkloadGraph:
+    """DenseNet-style dense-fan-in CNN (1010 nodes at the defaults):
+    every layer's 1x1 bottleneck consumes ALL previous activations in
+    its block, so activation lifetimes span whole blocks (big release
+    fan-in, ring width W in the hundreds) — the adversarial shape for
+    the rectifier's release-credit ring."""
+    nodes: List[Node] = []
+    edges: List[Tuple[int, int]] = []
+
+    def add(node: Node, srcs: List[int]) -> int:
+        idx = len(nodes)
+        nodes.append(node)
+        for s in srcs:
+            edges.append((s, idx))
+        return idx
+
+    i = add(Node(op="input", ifm=(hw * 2, hw * 2, 3), ofm=(hw * 2, hw * 2, 3)),
+            [])
+    i = add(_conv(3, 2 * growth, hw * 2, 3, stride=2), [i])
+    c = 2 * growth
+    for b in range(blocks):
+        feeds = [i]          # activations visible inside this block
+        for _ in range(layers_per_block):
+            cin = c + growth * (len(feeds) - 1)
+            j = add(_conv(cin, 4 * growth, hw, 1), list(feeds))
+            j = add(_conv(4 * growth, growth, hw, 3), [j])
+            feeds.append(j)
+        c = c + growth * layers_per_block
+        if b < blocks - 1:   # transition: 1x1 compress + stride-2 pool
+            i = add(_conv(c, c // 2, hw, 1), list(feeds))
+            c = c // 2
+            i = add(Node(op="pool", ifm=(hw, hw, c),
+                         ofm=(max(hw // 2, 4), max(hw // 2, 4), c),
+                         flops=float(hw * hw * c), kernel=(2, 2), stride=2),
+                    [i])
+            hw = max(hw // 2, 4)
+        else:
+            i = add(Node(op="pool", ifm=(hw, hw, c), ofm=(1, 1, c),
+                         flops=float(hw * hw * c), kernel=(hw, hw)),
+                    list(feeds))
+    add(Node(op="fc", weight_bytes=2.0 * c * 1000, ifm=(1, 1, c),
+             ofm=(1, 1, 1000), flops=2.0 * c * 1000), [i])
+    g = WorkloadGraph("dense_cnn", nodes, edges)
+    g.validate()
+    return g
+
+
 PAPER_WORKLOADS = {"resnet50": resnet50, "resnet101": resnet101, "bert": bert}
+SYNTH_WORKLOADS = {"moe_transformer": moe_transformer, "dense_cnn": dense_cnn}
+# the full registry the workload-batch subsystem (graphs/batch.py,
+# benchmarks bench_zoo_eval) evaluates against
+WORKLOADS = {**PAPER_WORKLOADS, **SYNTH_WORKLOADS}

@@ -55,7 +55,16 @@ def rectify_np(sg, mapping: np.ndarray):
                     + (contrib if tier == k else np.float32(0.0)))
         free = np.float32(free + per_tier)
 
-    total = np.float32(np.sum(wb_arr, dtype=np.float32)
-                       + np.sum(ab_arr, dtype=np.float32))
+    # eps denominator: recomputed HERE, independently of the
+    # ``sg.total_bytes`` the jnp paths divide by, so a bug in that
+    # precomputed field cannot hide from the parity tests.  The strict
+    # left-to-right float32 order matches ``simulator.total_bytes_np``
+    # (sequential, weights then activations — trailing zero padding is
+    # an IEEE identity, so the padded GraphBatch slice agrees too).
+    total = np.float32(0.0)
+    for v in wb_arr:
+        total = np.float32(total + v)
+    for v in ab_arr:
+        total = np.float32(total + v)
     eps = np.float32(moved / max(total, np.float32(1.0)))
     return out, eps

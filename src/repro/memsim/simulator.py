@@ -84,6 +84,13 @@ class SimGraph(NamedTuple):
     ring_lc: jnp.ndarray           # (N,) int32: last_consumer % W
     self_release: jnp.ndarray      # (N,) float32: 1.0 iff last_consumer==t
     ring_init: jnp.ndarray         # (W, N_TIERS) float32 zeros
+    # eps denominator, precomputed on the host in the numpy oracle's
+    # float32 summation order.  Keeping it in the graph (instead of a
+    # jnp.sum inside rectify) makes eps bit-identical across the
+    # per-graph path, the padded GraphBatch path (memsim.batch, where a
+    # zero-padded device reduction would regroup the adds) and the
+    # oracle, for any graph size.
+    total_bytes: jnp.ndarray       # () float32: sum(weights) + sum(acts)
 
 
 def build_release_idx(last_consumer: np.ndarray) -> np.ndarray:
@@ -98,6 +105,22 @@ def build_release_idx(last_consumer: np.ndarray) -> np.ndarray:
     for t, nodes in enumerate(released):
         out[t, :len(nodes)] = nodes
     return out
+
+
+def total_bytes_np(weight_bytes: np.ndarray, act_bytes: np.ndarray):
+    """Oracle-order float32 eps denominator (see SimGraph.total_bytes):
+    a strict left-to-right accumulation, weights then activations.
+    Sequential order (NOT np.sum, whose pairwise tree regroups with the
+    array length) makes trailing zero padding an IEEE identity, so a
+    graph's padded GraphBatch slice has bit-the-same total as the graph
+    itself.  ``reference.rectify_np`` recomputes this independently in
+    the same order — keep the two in sync."""
+    total = np.float32(0.0)
+    for v in np.asarray(weight_bytes, np.float32):
+        total = np.float32(total + v)
+    for v in np.asarray(act_bytes, np.float32):
+        total = np.float32(total + v)
+    return total
 
 
 def build_sim_graph(g: WorkloadGraph) -> SimGraph:
@@ -123,6 +146,7 @@ def build_sim_graph(g: WorkloadGraph) -> SimGraph:
         jnp.asarray(last % w, jnp.int32),
         jnp.asarray((last == t_arr).astype(np.float32)),
         jnp.zeros((w, T.N_TIERS), jnp.float32),
+        jnp.asarray(total_bytes_np(arr["weight_bytes"], arr["act_bytes"])),
     )
 
 
@@ -136,13 +160,15 @@ _HBM_ONEHOT = jnp.zeros(T.N_TIERS, jnp.float32).at[T.HBM_IDX].set(1.0)
 _UNROLL = 2
 
 
-def rectify(sg: SimGraph, mapping: jnp.ndarray):
-    """mapping (N, 2) int32 in [0,3): [:,0]=weight tier, [:,1]=act tier.
+def _rectify_scan(sg: SimGraph, mapping: jnp.ndarray):
+    """Scan core of ``rectify``: returns (rectified mapping, moved bytes).
 
-    Returns (rectified mapping, eps) — the compiler pass of Algorithm 1.
-    Sequential topo-order allocation with capacity counters (lax.scan)
-    over a ring buffer of release credits; O(1) work per step beyond the
-    O(W) ring row (see module docstring).
+    Exposed separately so the padded GraphBatch path (memsim.batch) can
+    vmap the scan over a stacked graph axis and divide by the per-graph
+    ``total_bytes`` itself.  Zero-byte padding steps are inert here by
+    IEEE arithmetic: ``x - 0*onehot == x`` and ``moved + 0 == moved``,
+    so a graph padded with weightless, self-releasing nodes produces the
+    same ``moved`` and the same real-row tiers bit for bit.
     """
     zrow = jnp.zeros((1, T.N_TIERS), jnp.float32)
 
@@ -184,26 +210,63 @@ def rectify(sg: SimGraph, mapping: jnp.ndarray):
     carry0 = (CAP, sg.ring_init, jnp.float32(0.0))
     (free, credit, moved), out_map = jax.lax.scan(
         step, carry0, xs, unroll=_UNROLL)
-    total = jnp.sum(sg.weight_bytes) + jnp.sum(sg.act_bytes)
-    eps = moved / jnp.maximum(total, 1.0)
+    return out_map, moved
+
+
+def rectify(sg: SimGraph, mapping: jnp.ndarray):
+    """mapping (N, 2) int32 in [0,3): [:,0]=weight tier, [:,1]=act tier.
+
+    Returns (rectified mapping, eps) — the compiler pass of Algorithm 1.
+    Sequential topo-order allocation with capacity counters (lax.scan)
+    over a ring buffer of release credits; O(1) work per step beyond the
+    O(W) ring row (see module docstring).
+    """
+    out_map, moved = _rectify_scan(sg, mapping)
+    eps = moved / jnp.maximum(sg.total_bytes, 1.0)
     return out_map, eps
 
 
-def latency(sg: SimGraph, mapping: jnp.ndarray) -> jnp.ndarray:
-    """Roofline latency of a (valid) mapping. mapping (N,2) int32."""
+def _seq_sum(x: jnp.ndarray) -> jnp.ndarray:
+    """Strictly left-to-right float sum.  Unlike ``jnp.sum`` (whose XLA
+    reduction tree regroups with the array LENGTH, so zero-padding
+    changes the result bitwise), a sequential accumulation extended by
+    trailing exact-0.0 terms is an IEEE identity — the property the
+    padded GraphBatch latency relies on to stay bit-exact against this
+    per-graph path."""
+    acc, _ = jax.lax.scan(lambda c, v: (c + v, None),
+                          jnp.zeros((), x.dtype), x, unroll=4)
+    return acc
+
+
+def latency(sg: SimGraph, mapping: jnp.ndarray,
+            node_mask: jnp.ndarray = None) -> jnp.ndarray:
+    """Roofline latency of a (valid) mapping. mapping (N,2) int32.
+
+    ``node_mask`` (N,) float32 multiplies the per-node terms — the
+    padded-batch path passes its validity mask so padding slots
+    contribute exactly 0.0 (real slots multiply by 1.0, an identity).
+    """
     w_bw = BW[mapping[:, 0]]
     out_bw = BW[mapping[:, 1]]
     w_t = sg.weight_bytes * sg.weight_frac / w_bw
     out_t = sg.act_bytes / out_bw
-    # inputs stream from wherever the producer placed them
+    # inputs stream from wherever the producer placed them; the fan-in
+    # axis is reduced left-to-right (a padded batch widens it with
+    # zero-byte columns on the right, which must stay an identity)
     in_tier = jnp.where(sg.in_acts >= 0,
                         mapping[jnp.clip(sg.in_acts, 0), 1], 0)
     in_bytes = jnp.where(sg.in_acts >= 0,
                          sg.act_bytes[jnp.clip(sg.in_acts, 0)], 0.0)
-    in_t = jnp.sum(in_bytes / BW[in_tier], axis=1)
+    in_terms = in_bytes / BW[in_tier]
+    in_t = in_terms[:, 0]
+    for j in range(1, in_terms.shape[1]):
+        in_t = in_t + in_terms[:, j]
     mem_t = w_t + out_t + in_t
     comp_t = sg.flops / (T.PEAK_FLOPS * T.OP_UTILIZATION_DEFAULT)
-    return jnp.sum(jnp.maximum(mem_t, comp_t) + T.FIXED_OVERHEAD_S)
+    terms = jnp.maximum(mem_t, comp_t) + T.FIXED_OVERHEAD_S
+    if node_mask is not None:
+        terms = terms * node_mask
+    return _seq_sum(terms)
 
 
 @partial(jax.jit, static_argnames=("reward_scale",))

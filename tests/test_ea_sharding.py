@@ -45,14 +45,21 @@ def test_resolve_pop_sharding_policies_multi_device():
     run_py("""
 import pytest
 from repro.distributed.population import resolve_pop_sharding
-# auto: largest divisor of BOTH sub-populations within the device count
-assert resolve_pop_sharding(12, 4, "auto").n_shards == 4
-assert resolve_pop_sharding(51, 13, "auto").n_shards == 1   # pop 64 @ 0.2
-assert resolve_pop_sharding(48, 16, "auto").n_shards == 4   # pop 64 @ 0.25
-assert resolve_pop_sharding(6, 2, "auto").n_shards == 2
-# explicit non-dividing shard counts fail loudly
-with pytest.raises(ValueError, match="divide"):
-    resolve_pop_sharding(51, 13, 4)
+# auto: all visible devices; non-dividing splits are PADDED, not
+# downgraded to fewer shards (PR 3)
+s = resolve_pop_sharding(12, 4, "auto")
+assert s.n_shards == 4 and s.padded(12, 4) == (12, 4)
+s = resolve_pop_sharding(51, 13, "auto")                    # pop 64 @ 0.2
+assert s.n_shards == 4 and s.padded(51, 13) == (52, 16)
+s = resolve_pop_sharding(48, 16, "auto")                    # pop 64 @ 0.25
+assert s.n_shards == 4 and s.padded(48, 16) == (48, 16)
+s = resolve_pop_sharding(6, 2, "auto")
+assert s.n_shards == 4 and s.padded(6, 2) == (8, 4)
+# auto never exceeds the larger sub-population
+assert resolve_pop_sharding(3, 2, "auto").n_shards == 3
+# explicit non-dividing shard counts now pad too
+s = resolve_pop_sharding(51, 13, 4)
+assert s.n_shards == 4 and s.padded(51, 13) == (52, 16)
 s = resolve_pop_sharding(12, 4, 2)
 assert s.n_shards == 2 and s.mesh.shape == {"pop": 2}
 print("OK")
@@ -122,6 +129,52 @@ assert trajs[1] == trajs[4], f"{trajs[1]} != {trajs[4]}"
 print("TRAJ-OK")
 """)
     assert "TRAJ-OK" in out
+
+
+def test_padded_trajectory_matches_unpadded_single_device():
+    """PR 3: a population split that does NOT divide the device count is
+    padded with masked slots, and the real-row reward trajectory is
+    bit-identical to the unpadded single-device run (13/3 padded to
+    16/4 over 4 shards)."""
+    out = run_py("""
+from repro.core.egrl import EGRL, EGRLConfig
+from repro.graphs.zoo import resnet50
+
+g = resnet50()
+cfg = EGRLConfig(pop_size=16, boltzmann_frac=0.2, elites=4, seed=0)
+trajs = {}
+for shards in ("off", 4):
+    algo = EGRL(g, cfg, mode="ea", pop_shards=shards)
+    assert (algo.n_g, algo.n_b) == (13, 3)
+    if shards == 4:
+        assert (algo.n_g_pad, algo.n_b_pad) == (16, 4)
+        assert algo.gnn_pop.shape[0] == 16
+    trajs[shards] = [(r["gen_best_reward"], r["gen_mean_reward"])
+                     for r in (algo.generation() for _ in range(4))]
+assert trajs["off"] == trajs[4], f'{trajs["off"]} != {trajs[4]}'
+print("PAD-OK")
+""")
+    assert "PAD-OK" in out
+
+
+def test_zoo_egrl_trajectory_matches_across_sharding():
+    """The multi-workload ZooEGRL composes with ("pop",) sharding: the
+    fitness trajectory over a padded 4-shard mesh matches single-device
+    (pop 8 -> 6/2 padded to 8/4)."""
+    out = run_py("""
+from repro.core.egrl import ZooEGRL, EGRLConfig
+from repro.graphs.zoo import resnet50, resnet101
+
+cfg = EGRLConfig(pop_size=8, boltzmann_frac=0.25, elites=2, seed=0)
+trajs = {}
+for shards in ("off", 4):
+    algo = ZooEGRL([resnet50(), resnet101()], cfg, pop_shards=shards)
+    trajs[shards] = [(r["gen_best_fitness"], r["gen_mean_fitness"])
+                     for r in (algo.generation() for _ in range(3))]
+assert trajs["off"] == trajs[4], f'{trajs["off"]} != {trajs[4]}'
+print("ZOO-SHARD-OK")
+""")
+    assert "ZOO-SHARD-OK" in out
 
 
 @pytest.mark.slow

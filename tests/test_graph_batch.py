@@ -1,0 +1,158 @@
+"""Workload-batch subsystem parity: the padded GraphBatch path
+(memsim.batch) must be BIT-exact against the per-graph simulator and
+the numpy oracle for every zoo graph — including a ragged mixed-size
+batch and garbage-filled padding slots — and zoo-wide pop-64 evaluation
+must run as one jitted call (the PR 3 acceptance criterion)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.graphs.batch import build_graph_batch
+from repro.graphs.zoo import WORKLOADS, bert, dense_cnn, moe_transformer, \
+    resnet50, resnet101
+from repro.memsim.batch import (aggregate_rewards, evaluate_population_zoo,
+                                evaluate_zoo, rectify_zoo)
+from repro.memsim.compiler import compiler_reference
+from repro.memsim.reference import rectify_np
+from repro.memsim.simulator import build_sim_graph, evaluate, \
+    evaluate_population
+
+# one ragged batch covering paper scale AND both 1k+-node graphs
+RAGGED = (resnet50, bert, moe_transformer)
+
+
+def _random_maps(rng, shape):
+    return rng.integers(0, 3, shape).astype(np.int32)
+
+
+def test_graph_batch_shapes_and_masks():
+    graphs = [f() for f in RAGGED]
+    gb = build_graph_batch(graphs)
+    n_max = max(g.n for g in graphs)
+    assert gb.n_max == n_max and gb.n_graphs == len(graphs)
+    assert gb.names == tuple(g.name for g in graphs)
+    for i, g in enumerate(graphs):
+        assert int(gb.n_nodes[i]) == g.n
+        mask = np.asarray(gb.node_mask[i])
+        assert (mask[:g.n] == 1.0).all() and (mask[g.n:] == 0.0).all()
+        # padding nodes are weightless and self-releasing (inert scan steps)
+        assert (np.asarray(gb.sim.weight_bytes[i, g.n:]) == 0).all()
+        assert (np.asarray(gb.sim.act_bytes[i, g.n:]) == 0).all()
+        assert (np.asarray(gb.sim.last_consumer[i, g.n:])
+                == np.arange(g.n, n_max)).all()
+        # padded adjacency rows are self-loop-only (disconnected)
+        adj = np.asarray(gb.adj[i])
+        assert (adj[g.n:, :g.n] == 0).all() and (adj[:g.n, g.n:] == 0).all()
+
+
+@pytest.mark.parametrize("name", sorted(WORKLOADS))
+def test_batched_rectify_bit_exact_vs_per_graph_and_oracle(name):
+    """Every zoo graph, evaluated through a ragged GraphBatch, must be
+    bit-identical to its single-graph path AND the numpy oracle —
+    rectified tiers, eps, latency, reward."""
+    g = WORKLOADS[name]()
+    other = resnet50() if name != "resnet50" else resnet101()
+    graphs = [g, other]                      # ragged: two distinct sizes
+    gb = build_graph_batch(graphs)
+    sg = build_sim_graph(g)
+    _, ref = compiler_reference(g)
+    rng = np.random.default_rng(0)
+    maps = _random_maps(rng, (9, gb.n_graphs, gb.n_max, 2))
+    # adversarial constants: all-VMEM / all-CMEM overflow the fast tiers
+    # on every zoo graph (forcing spills), all-HBM never spills
+    for tier in range(3):
+        maps[6 + tier] = tier
+    res = evaluate_population_zoo(gb, jnp.asarray(maps))
+    n_spilled = 0
+    for p in range(maps.shape[0]):
+        single = evaluate(sg, jnp.asarray(maps[p, 0, :g.n]),
+                          jnp.float32(ref))
+        for k in ("reward", "eps", "latency", "speedup"):
+            assert np.float32(single[k]) == np.float32(res[k][p, 0]), \
+                (name, p, k)
+        assert (np.asarray(single["rectified"])
+                == np.asarray(res["rectified"][p, 0, :g.n])).all()
+        # numpy oracle on exactly the padded arrays the batch evaluates
+        rect_n, eps_n = rectify_np(gb.graph_sim(0), maps[p, 0])
+        assert np.float32(res["eps"][p, 0]) == eps_n
+        assert (np.asarray(res["rectified"][p, 0, :g.n])
+                == rect_n[:g.n]).all()
+        n_spilled += int(eps_n > 0)
+    assert n_spilled > 0                     # the sweep exercises spills
+
+
+def test_padding_slots_are_inert_bitwise():
+    """Garbage mapping values in padding slots change NOTHING: rewards,
+    eps, latency and the (masked) rectified mappings are bit-identical."""
+    graphs = [f() for f in RAGGED]
+    gb = build_graph_batch(graphs)
+    rng = np.random.default_rng(1)
+    maps = _random_maps(rng, (3, gb.n_graphs, gb.n_max, 2))
+    garbage = maps.copy()
+    for i, g in enumerate(graphs):
+        garbage[:, i, g.n:] = _random_maps(rng, garbage[:, i, g.n:].shape)
+    a = evaluate_population_zoo(gb, jnp.asarray(maps))
+    b = evaluate_population_zoo(gb, jnp.asarray(garbage))
+    for k in a:
+        assert (np.asarray(a[k]) == np.asarray(b[k])).all(), k
+
+
+def test_over_padding_is_invariant_bitwise():
+    """The same graphs padded to a LARGER n_max produce bit-identical
+    per-graph simulator results (the scan's padding steps are IEEE
+    identities, and eps/latency use padding-independent reductions)."""
+    graphs = [resnet50(), resnet101()]
+    rng = np.random.default_rng(2)
+    gb1 = build_graph_batch(graphs)
+    gb2 = build_graph_batch(graphs, n_max=gb1.n_max + 173)
+    maps1 = _random_maps(rng, (4, 2, gb1.n_max, 2))
+    maps2 = np.zeros((4, 2, gb2.n_max, 2), np.int32)
+    maps2[:, :, :gb1.n_max] = maps1
+    r1 = evaluate_population_zoo(gb1, jnp.asarray(maps1))
+    r2 = evaluate_population_zoo(gb2, jnp.asarray(maps2))
+    for k in ("reward", "eps", "latency", "speedup", "valid"):
+        assert (np.asarray(r1[k]) == np.asarray(r2[k])).all(), k
+
+
+def test_zoo_rectify_masks_padding_rows():
+    gb = build_graph_batch([resnet50(), bert()])
+    rng = np.random.default_rng(3)
+    maps = _random_maps(rng, (gb.n_graphs, gb.n_max, 2))
+    rect, eps = rectify_zoo(gb, jnp.asarray(maps))
+    for i in range(gb.n_graphs):
+        n = int(gb.n_nodes[i])
+        assert (np.asarray(rect[i, n:]) == 0).all()
+
+
+def test_aggregate_rewards_modes():
+    r = jnp.asarray([[1.0, -2.0, 3.0], [0.5, 0.5, 0.5]])
+    assert np.allclose(np.asarray(aggregate_rewards(r, "mean")),
+                       [2.0 / 3.0, 0.5])
+    assert np.allclose(np.asarray(aggregate_rewards(r, "worst")),
+                       [-2.0, 0.5])
+    with pytest.raises(ValueError, match="mean"):
+        aggregate_rewards(r, "median")
+
+
+def test_pop64_zoo_eval_single_call_acceptance():
+    """PR 3 acceptance: a pop-64 population evaluated against a zoo that
+    includes a 1k+-node graph in ONE jitted device call, bit-exact vs
+    the per-graph evaluate_population path."""
+    graphs = [resnet50(), dense_cnn()]
+    assert any(g.n >= 1000 for g in graphs)
+    gb = build_graph_batch(graphs)
+    rng = np.random.default_rng(4)
+    maps = _random_maps(rng, (64, gb.n_graphs, gb.n_max, 2))
+    fn = jax.jit(lambda b, m: evaluate_population_zoo(b, m))
+    res = fn(gb, jnp.asarray(maps))          # ONE compiled executable
+    assert res["reward"].shape == (64, gb.n_graphs)
+    for i, g in enumerate(graphs):
+        sg = build_sim_graph(g)
+        _, ref = compiler_reference(g)
+        per = evaluate_population(sg, jnp.asarray(maps[:, i, :g.n]),
+                                  jnp.float32(ref))
+        for k in ("reward", "eps", "latency", "speedup"):
+            assert (np.float32(np.asarray(per[k]))
+                    == np.float32(np.asarray(res[k][:, i]))).all(), \
+                (g.name, k)
