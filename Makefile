@@ -1,5 +1,5 @@
 # Convenience targets; see ROADMAP.md for the tier-1 verify command.
-.PHONY: test smoke bench bench-zoo docs-check
+.PHONY: test smoke bench bench-zoo bench-check docs-check
 
 test:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python -m pytest -x -q
@@ -15,6 +15,13 @@ bench:
 # 1k+-node graphs) vs the per-graph loop
 bench-zoo:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python benchmarks/run.py zoo_eval
+
+# schema gate on the tracked benchmarks/BENCH_inner_loop.json: every
+# inner-loop section present with well-formed fields (never a timing
+# gate — safe on shared CI runners).  smoke.sh runs the same check on
+# its freshly-written temp JSON.
+bench-check:
+	python tools/bench_check.py
 
 # every REPRO_* env var referenced in src/ must be documented in
 # docs/architecture.md

@@ -29,14 +29,21 @@ _JSON_PATH = os.environ.get("BENCH_JSON", os.path.join(
     os.path.dirname(os.path.abspath(__file__)), "BENCH_inner_loop.json"))
 
 
-def _update_json(section: str, payload: dict) -> None:
+def _update_json(section: str, payload: dict, merge: bool = False) -> None:
+    """Rewrite one section of BENCH_inner_loop.json atomically.  With
+    ``merge=True`` the payload's keys are merged into the existing
+    section instead of replacing it — used by bench steps that annotate
+    a section another bench owns (bench_zoo_sac -> generation)."""
     data = {}
     try:
         with open(_JSON_PATH) as f:
             data = json.load(f)
     except (FileNotFoundError, json.JSONDecodeError):
         pass   # first run, or a truncated file from an interrupted one
-    data[section] = payload
+    if merge and isinstance(data.get(section), dict):
+        data[section] = {**data[section], **payload}
+    else:
+        data[section] = payload
     tmp = _JSON_PATH + ".tmp"
     with open(tmp, "w") as f:
         json.dump(data, f, indent=2, sort_keys=True)
@@ -179,7 +186,65 @@ def bench_generation() -> None:
             print(f"generation_{mode}_{g.name},{ms:.1f},ms_per_generation")
             row[f"{mode}_ms_per_generation"] = round(ms, 2)
         payload[g.name] = row
-    _update_json("generation", payload)
+    # merge: a standalone `run.py generation` refresh must not delete
+    # the zoo_sac keys bench_zoo_sac merged into this section (the
+    # bench-check gate requires them)
+    _update_json("generation", payload, merge=True)
+
+
+def bench_zoo_sac() -> None:
+    """Zoo-SAC gate: ms per zoo-wide batched SAC update call — ZooSAC
+    trains against all three paper workloads at once, one jitted
+    update_scan per call (`steps` gradient steps, each on a (G, B)
+    replay batch spanning the zoo).  Merges ``zoo_sac_ms`` (+ a
+    ``zoo_sac`` detail row) into the ``generation`` section of
+    BENCH_inner_loop.json so the SAC cost trajectory sits next to the
+    per-graph ``egrl_ms_per_generation`` it amortizes."""
+    from repro.core.egrl import EGRLConfig, ZooEGRL
+    from repro.graphs.zoo import bert, resnet50, resnet101
+
+    reps = max(3, min(10, STEPS // 80))
+    # pop 8 keeps one update call (pop+1 gradient steps over the padded
+    # (G, B, N_max=bert) grid) a few seconds on the CPU container while
+    # still covering the full three-graph paper zoo
+    cfg = EGRLConfig(pop_size=8, seed=0)
+    graphs = [resnet50(), resnet101(), bert()]
+    algo = ZooEGRL(graphs, cfg, mode="egrl")
+    steps = cfg.pop_size + cfg.pg_rollouts     # rollout rows per generation
+    # warmup: fill the bank until the first learner update has run (and
+    # compiled the scan) — sac.batch transitions need ceil(batch/steps)
+    # generations
+    for _ in range(8):
+        rec = algo.generation()
+        if "critic_loss" in rec:
+            break
+    assert "critic_loss" in rec, "bank never warmed up"
+
+    t0 = time.perf_counter()
+    gen_reps = max(2, reps // 2)
+    for _ in range(gen_reps):
+        algo.generation()          # full hybrid generation (incl. update)
+    gen_ms = (time.perf_counter() - t0) / gen_reps * 1e3
+
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        algo.learner.update(algo.bank, steps)   # the batched learner alone
+    ms = (time.perf_counter() - t0) / reps * 1e3
+
+    print(f"zoo_sac_update,{ms:.1f},ms_per_update_call_steps{steps}"
+          f"_graphs{algo.n_graphs}")
+    print(f"generation_egrl_zoo,{gen_ms:.1f},ms_per_generation"
+          f"_graphs{algo.n_graphs}")
+    _update_json("generation", {
+        "zoo_sac_ms": round(ms, 2),
+        "zoo_sac": {
+            "pop": cfg.pop_size,
+            "graphs": {g.name: g.n for g in graphs},
+            "update_steps_per_call": steps,
+            "sac_batch": algo.cfg.sac.batch,
+            "egrl_zoo_ms_per_generation": round(gen_ms, 2),
+        },
+    }, merge=True)
 
 
 def _pop_sharding_child() -> None:
@@ -282,6 +347,7 @@ BENCHES = {
     "rectify": bench_rectify,
     "zoo_eval": bench_zoo_eval,
     "generation": bench_generation,
+    "zoo_sac": bench_zoo_sac,
     "pop_sharding": bench_pop_sharding,
     "fig4": bench_fig4,
     "fig5": bench_fig5,
@@ -289,8 +355,10 @@ BENCHES = {
     "arch_placement": bench_arch_placement,
     "roofline": bench_roofline,
 }
-# "inner_loop" = the fast microbenchmark set used by benchmarks/smoke.sh
-GROUPS = {"inner_loop": ("rectify", "zoo_eval", "generation",
+# "inner_loop" = the fast microbenchmark set used by benchmarks/smoke.sh.
+# generation and zoo_sac both merge into the shared "generation"
+# section, so either can be refreshed standalone.
+GROUPS = {"inner_loop": ("rectify", "zoo_eval", "generation", "zoo_sac",
                          "pop_sharding")}
 
 

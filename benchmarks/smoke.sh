@@ -2,8 +2,9 @@
 # Fast CI smoke: the non-slow test suite, the docs gate, and a sanity
 # pass of the inner-loop microbenchmarks — rectify, the zoo-wide
 # GraphBatch evaluation (bench_zoo_eval, incl. the 1k+-node graphs),
-# generation, and pop_sharding (BENCH_STEPS=50 keeps the timed loops to
-# a few repetitions).  Invoke directly or via `make smoke`.  `set -e` + run.py's fail-loud main
+# generation, the zoo SAC learner (bench_zoo_sac), and pop_sharding
+# (BENCH_STEPS=50 keeps the timed loops to a few repetitions).  Invoke
+# directly or via `make smoke`.  `set -e` + run.py's fail-loud main
 # guarantee a non-zero exit when any sub-step raises — no silently
 # partial BENCH_inner_loop.json.
 set -euo pipefail
@@ -13,5 +14,11 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 python -m pytest -q -m "not slow"
 python tools/docs_check.py
 # reduced-budget sanity only: write the JSON to a temp file so smoke
-# timings never overwrite the tracked benchmarks/BENCH_inner_loop.json
-BENCH_STEPS=50 BENCH_JSON="$(mktemp)" python benchmarks/run.py inner_loop
+# timings never overwrite the tracked benchmarks/BENCH_inner_loop.json;
+# the temp file is removed on exit (incl. failures)
+BENCH_JSON="$(mktemp)"
+trap 'rm -f "$BENCH_JSON"' EXIT
+echo "smoke: BENCH_JSON=$BENCH_JSON (temp copy, removed on exit)"
+BENCH_STEPS=50 BENCH_JSON="$BENCH_JSON" python benchmarks/run.py inner_loop
+# schema gate on the freshly-written sections (not a timing gate)
+python tools/bench_check.py "$BENCH_JSON"

@@ -41,14 +41,17 @@ pure capacity/throughput knob, not a different algorithm.
 Modes: "egrl" (full), "ea" (ablate PG), "pg" (ablate EA) — the paper's
 baseline agents.
 
-Multi-workload training (PR 3): ``ZooEGRL`` evolves ONE population
-against a whole ``GraphBatch`` — per-generation fitness is a selectable
-aggregate (mean / worst-case, ``REPRO_FITNESS_AGG``) of per-graph
-rewards, evaluated zoo-wide in a single jitted device call
+Multi-workload training (PR 3, PG member PR 4): ``ZooEGRL`` evolves ONE
+population against a whole ``GraphBatch`` — per-generation fitness is a
+selectable aggregate (mean / worst-case, ``REPRO_FITNESS_AGG``) of
+per-graph rewards, evaluated zoo-wide in a single jitted device call
 (memsim.batch.evaluate_population_zoo).  GNN genomes transfer unchanged
 (their parameters are graph-size independent); Boltzmann genomes span
-the padded (G · N_max) node grid.  The SAC learner is per-graph, so
-ZooEGRL is EA-only for now (see ROADMAP).
+the padded (G · N_max) node grid.  In "egrl" mode the population is
+seeded by ``ZooSAC`` — the batched multi-workload SAC learner
+(core/sac.py) trained from a per-graph ``ReplayBank`` — with the same
+PG->EA migration as the per-graph driver, so the zoo path runs the full
+hybrid of the paper instead of the EA-only ablation.
 """
 from __future__ import annotations
 
@@ -65,8 +68,8 @@ import jax.numpy as jnp
 from repro.core import boltzmann as bz
 from repro.core import ea as ea_mod
 from repro.core import gnn
-from repro.core.replay import ReplayBuffer
-from repro.core.sac import SACConfig, SACLearner
+from repro.core.replay import ReplayBank, ReplayBuffer
+from repro.core.sac import SACConfig, SACLearner, ZooSAC
 from repro.distributed.population import resolve_pop_sharding
 from repro.graphs.batch import GraphBatch, build_graph_batch
 from repro.graphs.graph import WorkloadGraph
@@ -181,6 +184,15 @@ class _EvoPopulation:
         self._evolve = jax.jit(partial(
             _evolve_with_fitness_mask, base_evolve,
             self.n_g, self.n_g_pad, self.n_b, self.n_b_pad))
+        # PG migration: jitted row write into the last REAL GNN slot; on
+        # a sharded population it lands back in the population sharding
+        # (a collective scatter, not a host copy).  Shared by EGRL and
+        # ZooEGRL — both learners' actors flatten to the same (V,) genome
+        # encoding (GNN parameters are graph-size independent).
+        self._migrate = jax.jit(
+            lambda pop, vec: pop.at[self.n_g - 1].set(vec),
+            **({"out_shardings": self.pop_sharding.sharding}
+               if self.pop_sharding.active else {}))
 
 
 @dataclasses.dataclass
@@ -234,13 +246,6 @@ class EGRL(_EvoPopulation):
             jax.vmap(lambda k, lg: gnn.sample_actions(k, lg)))
         self._pop_boltz = jax.jit(jax.vmap(
             lambda k, f: bz.sample(k, bz.from_flat(f, graph.n))))
-        # PG migration: jitted row write into the last REAL GNN slot; on
-        # a sharded population it lands back in the population sharding
-        # (a collective scatter, not a host copy)
-        self._migrate = jax.jit(
-            lambda pop, vec: pop.at[self.n_g - 1].set(vec),
-            **({"out_shardings": self.pop_sharding.sharding}
-               if self.pop_sharding.active else {}))
 
         self.steps = 0
         self.best_reward = -np.inf
@@ -388,21 +393,23 @@ class ZooEGRL(_EvoPopulation):
     table per (graph, node) slot — reusing the flat encoding with
     ``n_nodes = G * N_max``.
 
-    EA-mode only: the SAC learner's critic is tied to one graph's
-    feature/adjacency tensors, so PG rollouts and migration are a
-    follow-up (ROADMAP).  Composes with the ("pop",) population
-    sharding exactly like ``EGRL`` — all per-genome work is
-    row-independent and the EA step handles padded slots.
+    Modes mirror the per-graph driver: "egrl" (full hybrid — the
+    ``ZooSAC`` learner contributes ``pg_rollouts`` zoo-wide exploration
+    rows, trains from the per-graph ``ReplayBank`` with one batched
+    gradient step per rollout row, and migrates its actor into the last
+    real GNN slot), "ea" (ablate PG — no learner, no bank; the
+    trajectory is bit-identical to the pre-ZooSAC EA-only driver) and
+    "pg" (ablate EA).  Composes with the ("pop",) population sharding
+    exactly like ``EGRL`` — all per-genome work is row-independent, the
+    EA step handles padded slots, and migration is a jitted row write
+    with ``out_shardings`` pinned to the population sharding.
     """
 
     def __init__(self, graphs: Sequence[WorkloadGraph],
                  cfg: EGRLConfig = EGRLConfig(), mode: str = "ea",
                  fitness_agg: Optional[str] = None, pop_shards=None,
                  batch: Optional[GraphBatch] = None):
-        if mode != "ea":
-            raise NotImplementedError(
-                "ZooEGRL is EA-only: the SAC learner is per-graph "
-                "(see ROADMAP 'multi-workload learner')")
+        assert mode in ("egrl", "ea", "pg")
         self.mode = mode
         self.cfg = cfg
         self.agg = (fitness_agg
@@ -415,8 +422,20 @@ class ZooEGRL(_EvoPopulation):
         self.n_eff = self.n_graphs * self.n_max    # Boltzmann node grid
         self.key = jax.random.PRNGKey(cfg.seed)
 
-        n_features = self.batch.feats.shape[-1]
-        self._template = gnn.init_gnn(self._k(), n_features)
+        n_features = self.batch.n_features
+        if mode == "ea":
+            # PRNG contract unchanged from the EA-only driver: the
+            # template is the FIRST key draw, so EA-mode trajectories
+            # stay bit-identical with the PG member disabled
+            self.learner, self.bank = None, None
+            self._template = gnn.init_gnn(self._k(), n_features)
+        else:
+            # mirror EGRL: the learner key is drawn first and the SAC
+            # actor doubles as the population template
+            self.learner = ZooSAC(self.batch, self._k(), cfg.sac)
+            self.bank = ReplayBank(self.n_graphs, self.n_max,
+                                   seed=cfg.seed)
+            self._template = self.learner.actor
         # ---- stacked populations + placement + evolve (_EvoPopulation)
         self._split_population()
         self._init_populations(n_features, self.n_eff, pop_shards)
@@ -451,6 +470,8 @@ class ZooEGRL(_EvoPopulation):
         if n_b:
             parts["b"] = self._pop_boltz(_pad_keys(
                 jax.random.split(self._k(), n_b), self.n_b_pad), self.bz_pop)
+        if self.mode != "ea":
+            parts["pg"] = self.learner.explore_actions(cfg.pg_rollouts)
         for name, maps in parts.items():   # maps (P_pad, G, N_max, 2)
             results[name] = evaluate_population_zoo(
                 self.batch, maps, cfg.reward_scale)
@@ -459,17 +480,19 @@ class ZooEGRL(_EvoPopulation):
         empty = jnp.zeros((0,), jnp.float32)
         fit = {name: aggregate_rewards(results[name]["reward"], self.agg)
                for name in parts}
-        self.gnn_pop, self.bz_pop = self._evolve(
-            self._k(),
-            self.gnn_pop, fit.get("g", empty),
-            self.bz_pop, fit.get("b", empty),
-            logits_g.reshape(self.n_g_pad, self.n_eff, 2, 3)
-            if logits_g is not None
-            else jnp.zeros((0, self.n_eff, 2, 3)))
+        if n_g or n_b:
+            self.gnn_pop, self.bz_pop = self._evolve(
+                self._k(),
+                self.gnn_pop, fit.get("g", empty),
+                self.bz_pop, fit.get("b", empty),
+                logits_g.reshape(self.n_g_pad, self.n_eff, 2, 3)
+                if logits_g is not None
+                else jnp.zeros((0, self.n_eff, 2, 3)))
 
         # ---- the ONE host sync per generation
         def np_real(name, x):
-            return np.asarray(x)[:real[name]]
+            a = np.asarray(x)
+            return a[:real[name]] if name in real else a
 
         rewards = np.concatenate(    # (P, G)
             [np_real(n, results[n]["reward"]) for n in parts])
@@ -485,6 +508,19 @@ class ZooEGRL(_EvoPopulation):
                 self.best_mapping[gi] = maps_np[
                     b, gi, :int(self.batch.n_nodes[gi])].copy()
         self.best_fitness = max(self.best_fitness, float(fitness.max()))
+
+        # ---- PG member: bank insert, one batched zoo-wide gradient
+        # step per rollout row (the update scan consumes a (G, B) batch
+        # per step, so this matches EGRL's one-step-per-env-step budget
+        # at the row level), then migration into the last real GNN slot
+        info = {}
+        if self.mode != "ea":
+            self.bank.add_batch(maps_np, rewards)
+            info = self.learner.update(self.bank, len(maps_np))
+            if self.mode == "egrl" and n_g > self.e_g:
+                self.gnn_pop = self._migrate(
+                    self.gnn_pop, gnn.flatten_params(self.learner.actor))
+
         rec = {
             "steps": self.steps,
             "gen_best_fitness": float(fitness.max()),
@@ -494,6 +530,7 @@ class ZooEGRL(_EvoPopulation):
             "best_reward_per_graph": {
                 name: float(self.best_reward[i])
                 for i, name in enumerate(self.batch.names)},
+            **info,
         }
         self.history.append(rec)
         return rec
@@ -510,9 +547,13 @@ class ZooEGRL(_EvoPopulation):
 
     def best_gnn_vec(self) -> Optional[np.ndarray]:
         """Flat params of the best GNN after a generation (row 0); usable
-        directly by the per-graph ``EGRL`` / ``evaluate_gnn_on``."""
+        directly by the per-graph ``EGRL`` / ``evaluate_gnn_on`` and the
+        batched ``evaluate_gnn_zoo``.  Falls back to the ZooSAC actor
+        when there is no GNN sub-population ("pg" ablation)."""
         if self.n_g:
             return np.asarray(self.gnn_pop[0])
+        if self.learner is not None:
+            return np.asarray(gnn.flatten_params(self.learner.actor))
         return None
 
 
@@ -532,3 +573,26 @@ def evaluate_gnn_on(graph: WorkloadGraph, vec: np.ndarray,
     _, ref = compiler_reference(graph)
     res = evaluate_population(sg, acts, jnp.float32(ref))
     return float(np.max(np.asarray(res["speedup"])))
+
+
+def evaluate_gnn_zoo(graphs: Sequence[WorkloadGraph], vec: np.ndarray,
+                     samples: int = 8, seed: int = 0,
+                     batch: Optional[GraphBatch] = None):
+    """Zero-shot transfer (Fig 5) over a whole workload zoo through the
+    batched path: ONE masked zoo forward + one zoo-wide population
+    evaluation score ``samples`` stochastic rollouts (plus the greedy
+    mapping) on EVERY graph at once, replacing the per-graph
+    ``evaluate_gnn_on`` loop of the sweep.  Returns {graph name: best
+    speedup}.  Pass ``batch`` to reuse a prebuilt ``GraphBatch`` (e.g.
+    the one a ``ZooEGRL`` trained against)."""
+    gb = batch if batch is not None else build_graph_batch(graphs)
+    template = gnn.init_gnn(jax.random.PRNGKey(0), gb.n_features)
+    params = gnn.unflatten_params(template, jnp.asarray(vec))
+    logits = gnn.gnn_forward_zoo(params, gb.feats, gb.adj, gb.node_mask,
+                                 gb.n_nodes)           # (G, N_max, 2, 3)
+    keys = jax.random.split(jax.random.PRNGKey(seed), samples)
+    acts = jax.vmap(lambda k: gnn.sample_actions(k, logits))(keys)
+    acts = jnp.concatenate([acts, gnn.greedy_actions(logits)[None]], 0)
+    res = evaluate_population_zoo(gb, acts)            # (S+1, G) arrays
+    best = np.asarray(res["speedup"]).max(axis=0)
+    return {name: float(best[i]) for i, name in enumerate(gb.names)}

@@ -229,6 +229,19 @@ def entropy(logits):
     return -(jnp.exp(lp) * lp).sum(-1).mean()
 
 
+def entropy_masked(logits, node_mask):
+    """``entropy`` over the REAL rows of one padded graph: logits
+    (N_max, 2, 3), node_mask (N_max,) 1.0 = real.  Padding rows are
+    excluded from both the sum and the divisor, so a no-padding mask
+    reduces this to ``entropy`` exactly — the G=1 parity the zoo SAC
+    learner relies on (core/sac.py)."""
+    lp = jax.nn.log_softmax(logits, axis=-1)
+    ent = -(jnp.exp(lp) * lp).sum(-1)                  # (N_max, N_SUB)
+    live = node_mask.astype(ent.dtype)
+    return (ent * live[:, None]).sum() / jnp.maximum(
+        live.sum() * ent.shape[-1], 1.0)
+
+
 def population_logits(template, feats, adj, pop_matrix,
                       backend: Optional[str] = None):
     """Stacked-population forward: (P, V) flat params -> (P, N, 2, 3).

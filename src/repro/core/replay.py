@@ -1,7 +1,13 @@
 """Shared replay buffer (Appendix C): every rollout from every member of
 the mixed population lands here; the SAC learner samples from it. The
 state (workload graph) is constant within a task, so entries store only
-(action, reward)."""
+(action, reward).
+
+``ReplayBank`` is the multi-workload form: one ``ReplayBuffer`` per zoo
+graph, filled from the stacked ``(P, G, N_max, 2)`` rollouts of a
+``ZooEGRL`` generation and sampled back into ONE ``(steps, G, B, ...)``
+stack so the ZooSAC update scan trains against the whole zoo per jitted
+device call (core/sac.py)."""
 from __future__ import annotations
 
 import numpy as np
@@ -42,3 +48,47 @@ class ReplayBuffer:
 
     def __len__(self):
         return self.size
+
+
+class ReplayBank:
+    """Per-graph replay for the workload zoo (see module docstring).
+
+    Buffers store the PADDED (N_max, 2) action rows exactly as the zoo
+    rollouts produce them, so sampling needs no re-padding.  Buffer i is
+    seeded ``seed + i`` — decorrelated index streams across graphs, and
+    a one-graph bank reproduces a ``ReplayBuffer(seed=seed)`` sample
+    stream exactly (the ZooSAC G=1 parity contract).
+    """
+
+    def __init__(self, n_graphs: int, n_nodes: int, capacity: int = 100_000,
+                 seed: int = 0):
+        self.buffers = [ReplayBuffer(n_nodes, capacity, seed + i)
+                        for i in range(n_graphs)]
+        self.n_nodes = n_nodes
+
+    def add_batch(self, actions, rewards):
+        """One generation's rollouts: actions (P, G, N_max, 2),
+        rewards (P, G) — row p of graph g lands in buffer g."""
+        actions = np.asarray(actions)
+        rewards = np.asarray(rewards)
+        for i, buf in enumerate(self.buffers):
+            buf.add_batch(actions[:, i], rewards[:, i])
+
+    def sample_stack(self, batch: int, steps: int):
+        """(steps, G, batch, N_max, 2) int32 actions + (steps, G, batch)
+        float32 rewards: one (G, batch) zoo batch per gradient step.
+        Per (step, graph) the draw order matches the single-buffer
+        ``[buf.sample(batch) for _ in range(steps)]`` sequence."""
+        n_graphs = len(self.buffers)
+        acts = np.empty((steps, n_graphs, batch, self.n_nodes, 2), np.int32)
+        rews = np.empty((steps, n_graphs, batch), np.float32)
+        for u in range(steps):
+            for i, buf in enumerate(self.buffers):
+                acts[u, i], rews[u, i] = buf.sample(batch)
+        return acts, rews
+
+    def __len__(self):
+        """Transitions available in EVERY graph's buffer (they fill in
+        lockstep under ``add_batch``, so this is just buffer 0's size —
+        min() keeps it honest for hand-filled banks)."""
+        return min((len(b) for b in self.buffers), default=0)

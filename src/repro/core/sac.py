@@ -10,6 +10,19 @@ space per Appendix D:
   bootstrap term vanish: the Bellman target is the (scaled) reward, so no
   target networks are required — noted deviation from the generic
   pseudocode, exact for this MDP.
+
+Two learners share the same losses and the same one-jitted-scan update
+(``_make_update_scan``):
+
+- ``SACLearner`` — the per-graph policy-gradient member of ``EGRL``,
+  unchanged single-graph forms;
+- ``ZooSAC`` — the multi-workload member of ``ZooEGRL``: actor and
+  double-Q critic run over the padded ``GraphBatch`` (masked zoo GNN
+  forward + ``critic_forward_masked``), trained on one ``(G, B)`` replay
+  batch per gradient step sampled from a per-graph ``ReplayBank``.  Its
+  losses are the per-graph SACLearner losses averaged over the zoo, so a
+  one-graph batch reduces to ``SACLearner`` exactly (to ~1e-6, see
+  tests/test_zoo_egrl.py) — the single-graph learner is the G=1 case.
 """
 from __future__ import annotations
 
@@ -22,7 +35,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import gnn
-from repro.core.replay import ReplayBuffer
+from repro.core.replay import ReplayBank, ReplayBuffer
+from repro.graphs.batch import GraphBatch
 from repro.utils.params import ParamDef, init_params
 
 
@@ -51,20 +65,37 @@ def critic_defs(n_features: int, hidden: int = gnn.HIDDEN):
     return d
 
 
-def critic_forward(p, feats, adj, act_onehot):
-    """act_onehot (N,2,3) float -> (q1, q2) scalars.
+def critic_forward_masked(p, feats, adj, node_mask, act_onehot):
+    """Double-Q critic over ONE padded graph: feats (N_max, F), adj
+    (N_max, N_max) with padding rows self-loop-only, node_mask (N_max,)
+    1.0 = real, act_onehot (N_max, 2, 3) -> (q1, q2) scalars.
 
-    Pins the "jnp" GAT backend: this runs under jax.grad (pallas_call
-    has no autodiff rule)."""
+    Padding rows are zeroed at the input and after every GAT level, and
+    the global pool divides by the REAL node count, so garbage in
+    padding slots (replay contents, sampled pad actions, noise) cannot
+    reach the Q values.  With no padding every mask op is an identity
+    and sum/count equals the mean pool — ``critic_forward`` (the
+    single-graph learner's form) is exactly this with an all-ones mask.
+    Pins the "jnp" GAT backend (runs under jax.grad).
+    """
+    live = node_mask.astype(feats.dtype)
     mask = adj > 0
     x = jnp.concatenate([feats, act_onehot.reshape(feats.shape[0], 6)], -1)
-    h = jnp.tanh(x @ p["inp"])
-    h = gnn._gat(p["gat0"], h, mask, backend="jnp")
-    h = gnn._gat(p["gat1"], h, mask, backend="jnp")
-    g = h.mean(axis=0)
+    h = jnp.tanh((x * live[:, None]) @ p["inp"]) * live[:, None]
+    h = gnn._gat(p["gat0"], h, mask, backend="jnp") * live[:, None]
+    h = gnn._gat(p["gat1"], h, mask, backend="jnp") * live[:, None]
+    g = h.sum(axis=0) / jnp.maximum(live.sum(), 1.0)
     z1 = jax.nn.elu(g @ p["h1"] + p["b1"])
     z2 = jax.nn.elu(g @ p["h2"] + p["b2"])
     return (z1 @ p["q1"])[0], (z2 @ p["q2"])[0]
+
+
+def critic_forward(p, feats, adj, act_onehot):
+    """act_onehot (N,2,3) float -> (q1, q2) scalars: the no-padding
+    (all-real-nodes) case of ``critic_forward_masked`` — one critic
+    implementation to maintain for both learners."""
+    return critic_forward_masked(
+        p, feats, adj, jnp.ones(feats.shape[0], feats.dtype), act_onehot)
 
 
 def _adam_init(params):
@@ -84,6 +115,33 @@ def _adam_step(lr, params, grads, state):
         lambda p, m_, v_: p - lr * (m_ / c1) / (jnp.sqrt(v_ / c2) + eps),
         params, m, v)
     return new, {"m": m, "v": v, "t": t}
+
+
+def _make_update_scan(cfg: SACConfig, critic_loss, actor_loss):
+    """All gradient steps of a generation in ONE jitted scan, shared by
+    the single-graph and the zoo learner: per step, one critic Adam step
+    on the noisy one-hot behavioral actions, then one actor Adam step
+    through the updated critic.  ``acts`` / ``rewards`` / ``noise``
+    carry a leading (steps,) axis; the loss callables define the
+    per-step batch shape."""
+
+    def update_scan(actor, critic, oa, oc, acts, rewards, noise):
+        def step(carry, xs):
+            actor, critic, oa, oc = carry
+            a_, r_, nz = xs
+            oh = jax.nn.one_hot(a_, 3) + nz
+            closs, cg = jax.value_and_grad(critic_loss)(critic, oh, r_)
+            critic, oc = _adam_step(cfg.lr_critic, critic, cg, oc)
+            (aloss, ent), ag = jax.value_and_grad(
+                actor_loss, has_aux=True)(actor, critic)
+            actor, oa = _adam_step(cfg.lr_actor, actor, ag, oa)
+            return (actor, critic, oa, oc), (closs, aloss, ent)
+
+        (actor, critic, oa, oc), (cl, al, en) = jax.lax.scan(
+            step, (actor, critic, oa, oc), (acts, rewards, noise))
+        return actor, critic, oa, oc, cl[-1], al[-1], en[-1]
+
+    return jax.jit(update_scan)
 
 
 class SACLearner:
@@ -114,25 +172,8 @@ class SACLearner:
             ent = gnn.entropy(logits)
             return -(jnp.minimum(q1, q2) + alpha * ent), ent
 
-        def update_scan(actor, critic, oa, oc, acts, rewards, noise):
-            """All gradient steps of a generation in one jitted scan.
-            acts (U, B, N, 2) int32; rewards (U, B); noise (U, B, N, 2, 3)."""
-            def step(carry, xs):
-                actor, critic, oa, oc = carry
-                a_, r_, nz = xs
-                oh = jax.nn.one_hot(a_, 3) + nz
-                closs, cg = jax.value_and_grad(critic_loss)(critic, oh, r_)
-                critic, oc = _adam_step(cfg.lr_critic, critic, cg, oc)
-                (aloss, ent), ag = jax.value_and_grad(
-                    actor_loss, has_aux=True)(actor, critic)
-                actor, oa = _adam_step(cfg.lr_actor, actor, ag, oa)
-                return (actor, critic, oa, oc), (closs, aloss, ent)
-
-            (actor, critic, oa, oc), (cl, al, en) = jax.lax.scan(
-                step, (actor, critic, oa, oc), (acts, rewards, noise))
-            return actor, critic, oa, oc, cl[-1], al[-1], en[-1]
-
-        self._update_scan = jax.jit(update_scan)
+        # acts (U, B, N, 2) int32; rewards (U, B); noise (U, B, N, 2, 3)
+        self._update_scan = _make_update_scan(cfg, critic_loss, actor_loss)
         self._logits = jax.jit(lambda ap: gnn.gnn_forward(ap, feats_, adj_))
         self._sample_batch = jax.jit(
             lambda ap, ks: jax.vmap(
@@ -163,6 +204,105 @@ class SACLearner:
         noise = jnp.clip(
             cfg.action_noise * jax.random.normal(
                 k, (steps, cfg.batch) + acts.shape[2:] + (3,)),
+            -cfg.noise_clip, cfg.noise_clip)
+        (self.actor, self.critic, self.opt_a, self.opt_c,
+         cl, al, en) = self._update_scan(
+            self.actor, self.critic, self.opt_a, self.opt_c,
+            jnp.asarray(acts), jnp.asarray(rews), noise)
+        return {"critic_loss": float(cl), "actor_loss": float(al),
+                "entropy": float(en)}
+
+
+class ZooSAC:
+    """Multi-workload SAC learner over a padded ``GraphBatch`` — the PG
+    member of ``ZooEGRL``.
+
+    The actor is the masked zoo GNN forward (``gnn.gnn_forward_zoo``);
+    the double-Q critic is ``critic_forward_masked`` evaluated per
+    graph.  Each gradient step trains on one ``(G, B)`` batch — B
+    transitions from EVERY workload's replay buffer (``ReplayBank``) —
+    and all steps of a generation run in one jitted ``lax.scan``
+    (``_make_update_scan``), so the per-step gradient cost that
+    dominates ``generation.egrl_ms`` is amortized across the whole zoo
+    in one device call instead of paid per graph.
+
+    Losses are the per-graph ``SACLearner`` losses averaged over the zoo
+    (equal weight per workload).  On a one-graph batch the PRNG streams
+    (init split, PRNGKey(17) noise/sampling chain) and the replay draw
+    order coincide with ``SACLearner``'s, so losses and updated
+    parameters match to ~1e-6 — enforced by tests/test_zoo_egrl.py.
+    Critic parameters are graph-size independent (shared GAT weights +
+    masked mean pool), exactly like the actor's.
+    """
+
+    def __init__(self, batch: GraphBatch, key, cfg: SACConfig = SACConfig()):
+        self.cfg = cfg
+        self.batch = batch
+        k1, k2 = jax.random.split(key)
+        self.actor = gnn.init_gnn(k1, batch.n_features)
+        self.critic = init_params(critic_defs(batch.n_features), k2)
+        self.opt_a = _adam_init(self.actor)
+        self.opt_c = _adam_init(self.critic)
+        self.key = jax.random.PRNGKey(17)
+
+        feats, adj = batch.feats, batch.adj
+        live, nreal = batch.node_mask, batch.n_nodes
+        alpha = cfg.alpha
+
+        def critic_loss(cp, acts_oh, rewards):
+            # acts_oh (G, B, N_max, 2, 3) noisy/soft one-hots from every
+            # workload's replay buffer; rewards (G, B)
+            def one_graph(f, a, m, oh_b, r_b):
+                q1, q2 = jax.vmap(
+                    lambda oh: critic_forward_masked(cp, f, a, m, oh))(oh_b)
+                return jnp.mean((q1 - r_b) ** 2 + (q2 - r_b) ** 2)
+
+            return jnp.mean(jax.vmap(one_graph)(
+                feats, adj, live, acts_oh, rewards))
+
+        def actor_loss(ap, cp):
+            # "jnp" backend: differentiated through (see critic_forward)
+            logits = gnn.gnn_forward_zoo(ap, feats, adj, live, nreal,
+                                         backend="jnp")   # (G, N_max, 2, 3)
+            probs = jax.nn.softmax(logits, axis=-1)
+
+            def one_graph(f, a, m, lg, pr):
+                q1, q2 = critic_forward_masked(cp, f, a, m, pr)
+                return jnp.minimum(q1, q2), gnn.entropy_masked(lg, m)
+
+            qmin, ent = jax.vmap(one_graph)(feats, adj, live, logits, probs)
+            ent = jnp.mean(ent)
+            return -(jnp.mean(qmin) + alpha * ent), ent
+
+        # acts (U, G, B, N_max, 2); rewards (U, G, B); noise adds (3,)
+        self._update_scan = _make_update_scan(cfg, critic_loss, actor_loss)
+        self._logits = jax.jit(lambda ap: gnn.gnn_forward_zoo(
+            ap, feats, adj, live, nreal))
+        self._sample_batch = jax.jit(
+            lambda ap, ks: jax.vmap(lambda k: gnn.sample_actions(
+                k, gnn.gnn_forward_zoo(ap, feats, adj, live, nreal)))(ks))
+
+    def policy_logits(self, params=None):
+        """(G, N_max, 2, 3) zoo logits (padding rows forced to 0)."""
+        return self._logits(self.actor if params is None else params)
+
+    def explore_actions(self, n: int) -> jnp.ndarray:
+        """(n, G, N_max, 2) rollout actions as ONE jitted device call:
+        each key samples every graph's sub-actions at once (padding rows
+        sample throwaway uniform actions — inert downstream)."""
+        self.key, k = jax.random.split(self.key)
+        return self._sample_batch(self.actor, jax.random.split(k, n))
+
+    def update(self, bank: ReplayBank, steps: int) -> Dict[str, float]:
+        """``steps`` zoo-wide gradient steps in one jitted scan, each on
+        a fresh ``(G, B)`` replay batch from the bank."""
+        cfg = self.cfg
+        if len(bank) < cfg.batch or steps <= 0:
+            return {}
+        acts, rews = bank.sample_stack(cfg.batch, steps)
+        self.key, k = jax.random.split(self.key)
+        noise = jnp.clip(
+            cfg.action_noise * jax.random.normal(k, acts.shape + (3,)),
             -cfg.noise_clip, cfg.noise_clip)
         (self.actor, self.critic, self.opt_a, self.opt_c,
          cl, al, en) = self._update_scan(

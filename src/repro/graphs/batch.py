@@ -68,6 +68,10 @@ class GraphBatch:
     def n_max(self) -> int:
         return self.node_mask.shape[1]
 
+    @property
+    def n_features(self) -> int:
+        return self.feats.shape[-1]
+
     def graph_sim(self, i: int) -> SimGraph:
         """The i-th graph's padded SimGraph slice (host-side helper for
         tests/tools that want to run the per-graph path or the numpy

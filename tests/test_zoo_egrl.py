@@ -1,12 +1,15 @@
 """Multi-workload EGRL (ZooEGRL) + the masked batched GNN forward + the
-1k+-node synthetic zoo graphs."""
+1k+-node synthetic zoo graphs + the ZooSAC policy-gradient member."""
 import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
 
 from repro.core import gnn
-from repro.core.egrl import EGRLConfig, ZooEGRL, evaluate_gnn_on
+from repro.core.egrl import (EGRLConfig, ZooEGRL, evaluate_gnn_on,
+                             evaluate_gnn_zoo)
+from repro.core.replay import ReplayBank, ReplayBuffer
+from repro.core.sac import SACConfig, SACLearner, ZooSAC
 from repro.graphs.batch import build_graph_batch
 from repro.graphs.zoo import (PAPER_WORKLOADS, SYNTH_WORKLOADS, WORKLOADS,
                               dense_cnn, moe_transformer, resnet50,
@@ -120,9 +123,6 @@ def test_zoo_egrl_env_var_and_validation(monkeypatch):
     monkeypatch.setenv("REPRO_FITNESS_AGG", "median")
     with pytest.raises(ValueError, match="REPRO_FITNESS_AGG"):
         ZooEGRL([resnet50()], EGRLConfig(pop_size=4, elites=1, seed=0))
-    with pytest.raises(NotImplementedError, match="EA-only"):
-        ZooEGRL([resnet50()], EGRLConfig(pop_size=4, elites=1, seed=0),
-                mode="egrl", fitness_agg="mean")
 
 
 def test_zoo_egrl_single_graph_matches_graph_semantics():
@@ -144,3 +144,149 @@ def test_zoo_egrl_with_1k_graphs():
     rec = algo.generation()
     assert algo.batch.n_max >= 1000
     assert len(rec["best_reward_per_graph"]) == 3
+
+
+# ------------------------------------------------- ZooSAC (the PG member)
+def test_zoo_sac_single_graph_matches_sac_learner():
+    """The zoo learner on a one-graph batch IS the single-graph learner:
+    same init key stream, same replay draw order, same PRNGKey(17) noise
+    chain — losses and updated parameters must agree to ~1e-6 (the zoo
+    losses are per-graph SACLearner losses averaged over G=1; remaining
+    diffs are XLA refusion of the masked identities)."""
+    g = resnet50()
+    gb = build_graph_batch([g])
+    key = jax.random.PRNGKey(5)
+    ref = SACLearner(jnp.asarray(g.features()), jnp.asarray(g.adjacency()),
+                     key)
+    zoo = ZooSAC(gb, key)
+    for a, b in zip(jax.tree.leaves(ref.actor), jax.tree.leaves(zoo.actor)):
+        assert (a == b).all()                 # identical init
+    for a, b in zip(jax.tree.leaves(ref.critic),
+                    jax.tree.leaves(zoo.critic)):
+        assert (a == b).all()
+
+    rng = np.random.default_rng(0)
+    acts = rng.integers(0, 3, (40, g.n, 2))
+    rews = rng.standard_normal(40).astype(np.float32)
+    buf = ReplayBuffer(g.n, seed=0)
+    buf.add_batch(acts, rews)
+    bank = ReplayBank(1, gb.n_max, seed=0)
+    bank.add_batch(acts[:, None], rews[:, None])
+
+    info_ref = ref.update(buf, steps=3)
+    info_zoo = zoo.update(bank, steps=3)
+    assert info_ref and info_zoo
+    for k in ("critic_loss", "actor_loss", "entropy"):
+        np.testing.assert_allclose(info_zoo[k], info_ref[k],
+                                   rtol=1e-5, atol=1e-6)
+    for a, b in zip(jax.tree.leaves(ref.actor), jax.tree.leaves(zoo.actor)):
+        np.testing.assert_allclose(np.asarray(b), np.asarray(a),
+                                   rtol=1e-4, atol=2e-5)
+    for a, b in zip(jax.tree.leaves(ref.critic),
+                    jax.tree.leaves(zoo.critic)):
+        np.testing.assert_allclose(np.asarray(b), np.asarray(a),
+                                   rtol=1e-4, atol=2e-5)
+
+
+def test_zoo_sac_critic_ignores_padding_content():
+    """Q values are a function of the real subgraph only: garbage in the
+    padded feature rows / action slots must not change them (the critic
+    counterpart of the zoo forward's content-inertness)."""
+    from repro.core.sac import critic_forward_masked, critic_defs
+    from repro.utils.params import init_params
+
+    graphs = [resnet50(), resnet101()]
+    gb = build_graph_batch(graphs)
+    p = init_params(critic_defs(gb.n_features), jax.random.PRNGKey(3))
+    oh = jax.nn.one_hot(
+        jax.random.randint(jax.random.PRNGKey(4),
+                           (gb.n_graphs, gb.n_max, 2), 0, 3), 3)
+    fwd = jax.jit(lambda f, a: jax.vmap(
+        lambda fi, ai, mi, ohi: critic_forward_masked(p, fi, ai, mi, ohi))(
+        f, gb.adj, gb.node_mask, a))
+    clean = fwd(gb.feats, oh)
+    rng = np.random.default_rng(5)
+    feats_d = np.asarray(gb.feats).copy()
+    oh_d = np.asarray(oh).copy()
+    for i, g in enumerate(graphs):
+        feats_d[i, g.n:] = rng.standard_normal(feats_d[i, g.n:].shape)
+        oh_d[i, g.n:] = rng.standard_normal(oh_d[i, g.n:].shape)
+    dirty = fwd(jnp.asarray(feats_d), jnp.asarray(oh_d))
+    for c, d in zip(clean, dirty):
+        np.testing.assert_allclose(np.asarray(c), np.asarray(d),
+                                   rtol=1e-6, atol=1e-6)
+
+
+def test_zoo_egrl_full_mode_trains_with_sac_member():
+    """"egrl" mode: PG rollouts score zoo-wide, the bank fills per
+    graph, the learner updates once warm, and losses surface in the
+    generation record."""
+    cfg = EGRLConfig(pop_size=6, boltzmann_frac=0.34, elites=1, seed=0,
+                     sac=SACConfig(batch=8))
+    algo = ZooEGRL([resnet50(), resnet101()], cfg, mode="egrl")
+    assert algo.learner is not None and algo.bank is not None
+    r1 = algo.generation()
+    # 7 rollout rows (pop 6 + 1 PG) x 2 graphs of env steps
+    assert algo.steps == 7 * 2
+    assert len(algo.bank) == 7            # per-graph transitions
+    assert "critic_loss" not in r1        # bank (7) still < sac batch (8)
+    r2 = algo.generation()
+    assert {"critic_loss", "actor_loss", "entropy"} <= set(r2)
+    assert len(algo.bank) == 14
+    # a trained zoo GNN still drops into both transfer APIs
+    assert algo.best_gnn_vec() is not None
+
+
+def test_zoo_egrl_pg_migration_writes_only_the_last_gnn_row():
+    cfg = EGRLConfig(pop_size=6, boltzmann_frac=0.34, elites=1, seed=0,
+                     sac=SACConfig(batch=4))
+    algo = ZooEGRL([resnet50(), resnet101()], cfg, mode="egrl")
+    algo.generation()
+    pop = np.asarray(algo.gnn_pop)
+    vec = jnp.arange(pop.shape[1], dtype=algo.gnn_pop.dtype)
+    new = np.asarray(algo._migrate(algo.gnn_pop, vec))
+    assert (new[algo.n_g - 1] == np.asarray(vec)).all()
+    others = np.arange(pop.shape[0]) != algo.n_g - 1
+    assert (new[others] == pop[others]).all()   # bitwise untouched
+
+
+def test_zoo_egrl_ea_mode_has_no_pg_state():
+    """Disabling the PG member must leave the EA path untouched: no
+    learner, no bank, and the template drawn from the FIRST key (the
+    PR 3 PRNG contract, so EA trajectories stay bit-identical)."""
+    cfg = EGRLConfig(pop_size=4, elites=1, seed=0)
+    algo = ZooEGRL([resnet50()], cfg, mode="ea")
+    assert algo.learner is None and algo.bank is None
+    _, k0 = jax.random.split(jax.random.PRNGKey(cfg.seed))
+    want = gnn.init_gnn(k0, algo.batch.n_features)
+    for a, b in zip(jax.tree.leaves(want), jax.tree.leaves(algo._template)):
+        assert (a == b).all()
+
+
+def test_launch_train_zoo_report():
+    """The zoo training entry point wires ZooEGRL + the batched
+    zero-shot sweep into one report ("pg" ablation keeps it fast; the
+    zero-shot vec falls back to the ZooSAC actor there)."""
+    from repro.launch.train_zoo import train_zoo
+
+    report, algo = train_zoo(["resnet50"], holdout=["resnet101"], steps=2,
+                             mode="pg", agg="mean", seed=0, log=None)
+    assert set(report["train_best_speedup"]) == {"resnet50"}
+    assert set(report["zero_shot_speedup"]) == {"resnet101"}
+    assert report["env_steps"] >= 2 and report["agg"] == "mean"
+    assert all(sp >= 0.0 for sp in report["zero_shot_speedup"].values())
+
+
+def test_evaluate_gnn_zoo_matches_greedy_floor():
+    """The batched zero-shot sweep reports at least the greedy mapping's
+    speedup per graph (stochastic samples can only improve the max), and
+    names line up with the input order."""
+    graphs = [resnet50(), resnet101()]
+    n_feat = graphs[0].features().shape[1]
+    vec = gnn.flatten_params(gnn.init_gnn(jax.random.PRNGKey(0), n_feat))
+    out = evaluate_gnn_zoo(graphs, vec, samples=2, seed=0)
+    assert set(out) == {"resnet50", "resnet101"}
+    greedy_only = evaluate_gnn_zoo(graphs, vec, samples=0, seed=0)
+    for name in out:
+        assert out[name] >= greedy_only[name] - 1e-6
+        assert out[name] >= 0.0

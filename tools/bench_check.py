@@ -1,0 +1,150 @@
+"""Schema gate for ``benchmarks/BENCH_inner_loop.json``: every section
+the inner-loop bench group owns must be present with well-formed fields.
+
+This is a SCHEMA gate, not a timing gate — it checks that each expected
+section exists, carries its required keys, and that every timing field
+is a positive finite number, so it never flakes on a slow shared CI
+runner.  It catches the real failure modes: a bench silently dropped
+from the group, a renamed JSON key that would break trajectory
+comparisons across PRs, or a merge step (bench_zoo_sac -> generation)
+that stopped landing.
+
+Usage: ``python tools/bench_check.py [path]`` — default path is the
+tracked ``benchmarks/BENCH_inner_loop.json``; ``benchmarks/smoke.sh``
+passes its temp BENCH_JSON so the freshly-written file is validated on
+every smoke run.  Wired into ``make bench-check`` and CI.
+"""
+from __future__ import annotations
+
+import json
+import math
+import pathlib
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+DEFAULT = ROOT / "benchmarks" / "BENCH_inner_loop.json"
+
+# section -> required scalar timing keys of each per-graph/per-mesh row
+PER_GRAPH_MS = ("ea_ms_per_generation", "egrl_ms_per_generation")
+PER_GRAPH_US = ("rectify_us_per_rollout", "evaluate_us_per_rollout")
+
+
+def _fail(errors, msg):
+    errors.append(msg)
+
+
+def _require(errors, section, obj, key, kind=(int, float)):
+    if key not in obj:
+        _fail(errors, f"{section}: missing key {key!r}")
+        return None
+    val = obj[key]
+    if kind in ((int, float), float):
+        ok = isinstance(val, (int, float)) and not isinstance(val, bool)
+        ok = ok and math.isfinite(val) and val > 0
+        if not ok:
+            _fail(errors, f"{section}.{key}: expected a positive finite "
+                          f"number, got {val!r}")
+    elif not isinstance(val, kind):
+        _fail(errors, f"{section}.{key}: expected {kind}, got {type(val)}")
+    return val
+
+
+def check(data: dict) -> list:
+    errors = []
+
+    # ---- rectify: pop + at least one per-graph row of us/rollout pairs
+    rect = data.get("rectify")
+    if not isinstance(rect, dict):
+        _fail(errors, "missing section 'rectify'")
+    else:
+        _require(errors, "rectify", rect, "pop")
+        rows = {k: v for k, v in rect.items() if isinstance(v, dict)}
+        if not rows:
+            _fail(errors, "rectify: no per-graph rows")
+        for name, row in rows.items():
+            for key in PER_GRAPH_US:
+                _require(errors, f"rectify.{name}", row, key)
+
+    # ---- zoo_eval: batch geometry + both us/rollout numbers
+    zoo = data.get("zoo_eval")
+    if not isinstance(zoo, dict):
+        _fail(errors, "missing section 'zoo_eval'")
+    else:
+        _require(errors, "zoo_eval", zoo, "pop")
+        _require(errors, "zoo_eval", zoo, "n_max")
+        _require(errors, "zoo_eval", zoo, "rollouts_per_call")
+        _require(errors, "zoo_eval", zoo, "batched_us_per_rollout")
+        _require(errors, "zoo_eval", zoo, "pergraph_loop_us_per_rollout")
+        graphs = _require(errors, "zoo_eval", zoo, "graphs", kind=dict)
+        if isinstance(graphs, dict) and not graphs:
+            _fail(errors, "zoo_eval.graphs: empty")
+
+    # ---- generation: per-graph ea/egrl ms + the merged zoo SAC bench
+    gen = data.get("generation")
+    if not isinstance(gen, dict):
+        _fail(errors, "missing section 'generation'")
+    else:
+        _require(errors, "generation", gen, "pop")
+        _require(errors, "generation", gen, "zoo_sac_ms")
+        detail = _require(errors, "generation", gen, "zoo_sac", kind=dict)
+        if isinstance(detail, dict):
+            _require(errors, "generation.zoo_sac", detail,
+                     "egrl_zoo_ms_per_generation")
+            _require(errors, "generation.zoo_sac", detail,
+                     "update_steps_per_call")
+        rows = {k: v for k, v in gen.items()
+                if isinstance(v, dict) and k != "zoo_sac"}
+        if not rows:
+            _fail(errors, "generation: no per-graph rows")
+        for name, row in rows.items():
+            for key in PER_GRAPH_MS:
+                _require(errors, f"generation.{name}", row, key)
+
+    # ---- pop_sharding: one row per benched mesh size
+    pop = data.get("pop_sharding")
+    if not isinstance(pop, dict):
+        _fail(errors, "missing section 'pop_sharding'")
+    else:
+        _require(errors, "pop_sharding", pop, "pop")
+        meshes = {k: v for k, v in pop.items()
+                  if k.startswith("mesh") and isinstance(v, dict)}
+        if not meshes:
+            _fail(errors, "pop_sharding: no mesh<N> rows")
+        for name, row in meshes.items():
+            _require(errors, f"pop_sharding.{name}", row, "mesh")
+            _require(errors, f"pop_sharding.{name}", row, "shards")
+            _require(errors, f"pop_sharding.{name}", row,
+                     "ea_ms_per_generation")
+
+    return errors
+
+
+def main(argv=None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    path = pathlib.Path(argv[0]) if argv else DEFAULT
+    try:
+        with open(path) as f:
+            data = json.load(f)
+    except FileNotFoundError:
+        print(f"bench-check: {path} does not exist (run "
+              f"`python benchmarks/run.py inner_loop` first)",
+              file=sys.stderr)
+        return 1
+    except json.JSONDecodeError as e:
+        print(f"bench-check: {path} is not valid JSON: {e}",
+              file=sys.stderr)
+        return 1
+    errors = check(data)
+    if errors:
+        print(f"bench-check: {path} failed {len(errors)} check(s):",
+              file=sys.stderr)
+        for e in errors:
+            print(f"  - {e}", file=sys.stderr)
+        return 1
+    print(f"bench-check OK: {path} has all expected sections "
+          f"(rectify, zoo_eval, generation[+zoo_sac], pop_sharding)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
