@@ -1,25 +1,26 @@
 """Figure 5 reproduction: zero-shot transfer of the GNN policy — train on
 one workload, evaluate (no fine-tuning) on the others.
 
-The evaluation leg runs through the batched zoo path
+The evaluation leg runs through the bucketed zoo path
 (``evaluate_gnn_zoo``): all destination workloads are stacked into one
-``GraphBatch`` and scored in one zoo-wide device call per trained
-policy, instead of a per-graph ``evaluate_gnn_on`` loop."""
+size-bucketed ``BucketedZoo`` (one padded batch per size class, policy
+``REPRO_ZOO_BUCKETS``) and scored in one device call per bucket per
+trained policy, instead of a per-graph ``evaluate_gnn_on`` loop."""
 from __future__ import annotations
 
 import json
 import os
 
 from repro.core.egrl import EGRL, EGRLConfig, evaluate_gnn_zoo
-from repro.graphs.batch import build_graph_batch
+from repro.graphs.bucketed import build_bucketed_zoo
 from repro.graphs.zoo import PAPER_WORKLOADS
 
 
 def run(steps: int = 1000, train_on=("bert", "resnet50"),
         outdir: str = "experiments/fig5", seed: int = 0, log=print):
     os.makedirs(outdir, exist_ok=True)
-    # one padded batch of the whole sweep grid, reused for every source
-    batch = build_graph_batch([f() for f in PAPER_WORKLOADS.values()])
+    # one bucketed zoo of the whole sweep grid, reused for every source
+    batch = build_bucketed_zoo([f() for f in PAPER_WORKLOADS.values()])
     rows = []
     for src in train_on:
         algo = EGRL(PAPER_WORKLOADS[src](),

@@ -109,21 +109,27 @@ def bench_rectify() -> None:
 
 def bench_zoo_eval() -> None:
     """Workload-batch gate: zoo-wide pop-64 evaluation — every graph in
-    the registry (including both 1k+-node synthetics) scored in ONE
-    jitted device call over a padded GraphBatch — vs the per-graph
-    evaluate_population loop on the same mappings.  Writes the zoo_eval
-    section of BENCH_inner_loop.json (us/rollout, batch geometry)."""
+    the registry (including both 1k+-node synthetics) scored over (a)
+    ONE flat padded GraphBatch, (b) the size-bucketed BucketedZoo (one
+    jitted call per bucket, each padded only to its own size class) and
+    (c) the per-graph evaluate_population loop, all on the same
+    mappings.  Writes the zoo_eval section of BENCH_inner_loop.json
+    (us/rollout, batch + bucket geometry, and the pad_waste_frac gauge
+    — the padded-slot fraction the bucketing removes)."""
     import jax
     import jax.numpy as jnp
     from repro.graphs.batch import build_graph_batch
+    from repro.graphs.bucketed import BucketedZoo, build_bucketed_zoo
     from repro.graphs.zoo import WORKLOADS
-    from repro.memsim.batch import evaluate_population_zoo
+    from repro.memsim.batch import (evaluate_population_bucketed,
+                                    evaluate_population_zoo)
     from repro.memsim.simulator import build_sim_graph, evaluate_population
 
     pop = 64
     reps = max(3, min(10, STEPS // 80))    # BENCH_STEPS scales the loop
     graphs = [f() for f in WORKLOADS.values()]
     assert sum(g.n >= 1000 for g in graphs) >= 2
+    assert sum(g.n < 200 for g in graphs) >= 2   # small size classes exist
     gb = build_graph_batch(graphs)
     rollouts = pop * gb.n_graphs
     maps = jax.random.randint(jax.random.PRNGKey(0),
@@ -134,6 +140,18 @@ def bench_zoo_eval() -> None:
     for _ in range(reps):
         jax.block_until_ready(evaluate_population_zoo(gb, maps)["reward"])
     us_zoo = (time.perf_counter() - t0) / reps / rollouts * 1e6
+
+    # bucketed path on the SAME mappings (bit-exact per-graph scalars)
+    bz = build_bucketed_zoo(graphs)
+    assert bz.n_buckets >= 2, "mixed-size zoo should bucket"
+    bmaps = bz.split_zoo_mappings(maps)
+    jax.block_until_ready(
+        evaluate_population_bucketed(bz, bmaps)["reward"])
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(
+            evaluate_population_bucketed(bz, bmaps)["reward"])
+    us_bucketed = (time.perf_counter() - t0) / reps / rollouts * 1e6
 
     # per-graph loop on the same mappings (the path the batch replaces),
     # scored against the same reference latencies the batch holds
@@ -150,17 +168,30 @@ def bench_zoo_eval() -> None:
             jax.block_until_ready(evaluate_population(sg, m, ref)["reward"])
     us_loop = (time.perf_counter() - t0) / reps / rollouts * 1e6
 
+    waste_flat = BucketedZoo.from_batch(gb).pad_waste_frac()
+    waste_bucketed = bz.pad_waste_frac()
     print(f"zoo_eval_batched,{us_zoo:.1f},us_per_rollout_pop{pop}"
           f"_graphs{gb.n_graphs}")
+    print(f"zoo_eval_bucketed,{us_bucketed:.1f},us_per_rollout_pop{pop}"
+          f"_buckets{bz.n_buckets}")
     print(f"zoo_eval_pergraph_loop,{us_loop:.1f},us_per_rollout_pop{pop}"
           f"_graphs{gb.n_graphs}")
+    print(f"zoo_eval_pad_waste,{waste_bucketed:.4f},"
+          f"frac_vs_flat_{waste_flat:.4f}")
     _update_json("zoo_eval", {
         "pop": pop,
         "graphs": {g.name: g.n for g in graphs},
         "n_max": gb.n_max,
         "rollouts_per_call": rollouts,
         "batched_us_per_rollout": round(us_zoo, 2),
+        "bucketed_us_per_rollout": round(us_bucketed, 2),
         "pergraph_loop_us_per_rollout": round(us_loop, 2),
+        "pad_waste_frac": {"flat": round(waste_flat, 4),
+                           "bucketed": round(waste_bucketed, 4)},
+        "buckets": {
+            f"bucket{k}": {"n_max": b.n_max, "w_max": b.w_max,
+                           "graphs": list(b.names)}
+            for k, b in enumerate(bz.buckets)},
     })
 
 

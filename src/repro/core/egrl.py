@@ -41,22 +41,26 @@ pure capacity/throughput knob, not a different algorithm.
 Modes: "egrl" (full), "ea" (ablate PG), "pg" (ablate EA) — the paper's
 baseline agents.
 
-Multi-workload training (PR 3, PG member PR 4): ``ZooEGRL`` evolves ONE
-population against a whole ``GraphBatch`` — per-generation fitness is a
+Multi-workload training (PR 3, PG member PR 4, size buckets PR 5):
+``ZooEGRL`` evolves ONE population against a whole workload zoo — the
+graphs live in a size-bucketed ``BucketedZoo`` (one ``GraphBatch`` per
+size class, policy ``REPRO_ZOO_BUCKETS``), per-generation fitness is a
 selectable aggregate (mean / worst-case, ``REPRO_FITNESS_AGG``) of
-per-graph rewards, evaluated zoo-wide in a single jitted device call
-(memsim.batch.evaluate_population_zoo).  GNN genomes transfer unchanged
+per-graph rewards, evaluated in one jitted device call PER BUCKET
+(memsim.batch.evaluate_population_bucketed) so small workloads don't
+pay the biggest graph's padded scan.  GNN genomes transfer unchanged
 (their parameters are graph-size independent); Boltzmann genomes span
-the padded (G · N_max) node grid.  In "egrl" mode the population is
-seeded by ``ZooSAC`` — the batched multi-workload SAC learner
-(core/sac.py) trained from a per-graph ``ReplayBank`` — with the same
-PG->EA migration as the per-graph driver, so the zoo path runs the full
-hybrid of the paper instead of the EA-only ablation.
+the bucket-major padded node grid ``sum_k(G_k · N_max_k)``.  In "egrl"
+mode the population is seeded by ``ZooSAC`` — the batched
+multi-workload SAC learner (core/sac.py) trained from a per-zoo-index
+``ReplayBank`` — with the same PG->EA migration as the per-graph
+driver, so the zoo path runs the full hybrid of the paper instead of
+the EA-only ablation.  Single-bucket zoos are bit-identical to the
+flat GraphBatch path (see graphs/bucketed.py's PRNG discipline).
 """
 from __future__ import annotations
 
 import dataclasses
-import os
 from functools import partial
 from typing import Dict, List, Optional, Sequence
 
@@ -71,11 +75,15 @@ from repro.core import gnn
 from repro.core.replay import ReplayBank, ReplayBuffer
 from repro.core.sac import SACConfig, SACLearner, ZooSAC
 from repro.distributed.population import resolve_pop_sharding
-from repro.graphs.batch import GraphBatch, build_graph_batch
+from repro.graphs.batch import GraphBatch
+from repro.graphs.bucketed import (BucketedZoo, bucket_keys_batch,
+                                   build_bucketed_zoo)
 from repro.graphs.graph import WorkloadGraph
-from repro.memsim.batch import aggregate_rewards, evaluate_population_zoo
+from repro.memsim.batch import (aggregate_rewards,
+                                evaluate_population_bucketed)
 from repro.memsim.compiler import compiler_reference
 from repro.memsim.simulator import build_sim_graph, evaluate_population
+from repro.utils.envpolicy import env_policy
 
 
 def _pad_rows(x: jnp.ndarray, rows: int) -> jnp.ndarray:
@@ -374,12 +382,17 @@ class EGRL(_EvoPopulation):
 
 class ZooEGRL(_EvoPopulation):
     """Multi-workload EGRL: one EA population trained against the whole
-    workload zoo, every generation scored in a single jitted device call.
+    workload zoo, every generation scored in one jitted device call PER
+    SIZE BUCKET.
 
-    The graphs are stacked into a padded ``GraphBatch``; per-genome
-    mappings are (G, N_max, 2) and ``evaluate_population_zoo`` returns
-    per-graph rewards (P, G), folded into one fitness scalar per genome
-    by ``fitness_agg``:
+    The graphs are grouped into a ``BucketedZoo`` (PR 5,
+    ``REPRO_ZOO_BUCKETS`` / the ``buckets`` argument): K GraphBatches,
+    each padded only to its own (N_max_k, W_max_k), so small workloads
+    no longer pay the biggest graph's scan length and ring width.
+    Per-genome mappings are per-bucket (G_k, N_max_k, 2) stacks;
+    ``evaluate_population_bucketed`` returns per-graph rewards (P, G)
+    in ZOO order, folded into one fitness scalar per genome by
+    ``fitness_agg``:
 
     - ``"mean"`` — average reward across the zoo (generalist);
     - ``"worst"`` — minimax: the weakest graph's reward, so evolution
@@ -387,42 +400,50 @@ class ZooEGRL(_EvoPopulation):
 
     GNN genomes are the same (V,) flat parameter vectors as the
     per-graph ``EGRL`` (Graph U-Net weights are graph-size independent;
-    the batched forward masks padding, see core.gnn.gnn_forward_zoo), so
-    populations transfer between per-graph and zoo training.  Boltzmann
-    genomes span the padded G·N_max node grid — one prior/temperature
-    table per (graph, node) slot — reusing the flat encoding with
-    ``n_nodes = G * N_max``.
+    the per-bucket forwards mask padding, see core.gnn), so populations
+    transfer between per-graph and zoo training — and between bucketing
+    policies.  Boltzmann genomes span the bucket-major padded node grid
+    ``n_eff = sum_k(G_k * N_max_k)`` — one prior/temperature table per
+    (graph, node) slot — reusing the flat encoding with ``n_nodes =
+    n_eff``; for a single-bucket zoo this is exactly the flat G · N_max
+    grid, and ALL single-bucket trajectories are bit-identical to the
+    flat-GraphBatch path (per-bucket PRNG keys come from
+    ``bucket_keys``, which consumes the caller's key unchanged at K=1).
 
     Modes mirror the per-graph driver: "egrl" (full hybrid — the
     ``ZooSAC`` learner contributes ``pg_rollouts`` zoo-wide exploration
-    rows, trains from the per-graph ``ReplayBank`` with one batched
+    rows, trains from the per-zoo-index ``ReplayBank`` with one batched
     gradient step per rollout row, and migrates its actor into the last
-    real GNN slot), "ea" (ablate PG — no learner, no bank; the
-    trajectory is bit-identical to the pre-ZooSAC EA-only driver) and
-    "pg" (ablate EA).  Composes with the ("pop",) population sharding
-    exactly like ``EGRL`` — all per-genome work is row-independent, the
-    EA step handles padded slots, and migration is a jitted row write
-    with ``out_shardings`` pinned to the population sharding.
+    real GNN slot), "ea" (ablate PG — no learner, no bank) and "pg"
+    (ablate EA).  Composes with the ("pop",) population sharding
+    exactly like ``EGRL`` — every per-bucket call is still a pure vmap
+    over the population axis, the EA step handles padded slots, and
+    migration is a jitted row write with ``out_shardings`` pinned to
+    the population sharding.
     """
 
     def __init__(self, graphs: Sequence[WorkloadGraph],
                  cfg: EGRLConfig = EGRLConfig(), mode: str = "ea",
                  fitness_agg: Optional[str] = None, pop_shards=None,
-                 batch: Optional[GraphBatch] = None):
+                 zoo: Optional[BucketedZoo] = None, buckets=None):
+        """``zoo`` reuses a prebuilt ``BucketedZoo`` (or a flat
+        ``GraphBatch``, wrapped as one bucket); ``buckets`` overrides
+        the ``REPRO_ZOO_BUCKETS`` policy ("auto" / "off" / int)."""
         assert mode in ("egrl", "ea", "pg")
         self.mode = mode
         self.cfg = cfg
-        self.agg = (fitness_agg
-                    or os.environ.get("REPRO_FITNESS_AGG", "mean"))
-        if self.agg not in ("mean", "worst"):
-            raise ValueError(
-                f"REPRO_FITNESS_AGG={self.agg!r} (use 'mean' or 'worst')")
-        self.batch = batch if batch is not None else build_graph_batch(graphs)
-        self.n_graphs, self.n_max = self.batch.n_graphs, self.batch.n_max
-        self.n_eff = self.n_graphs * self.n_max    # Boltzmann node grid
+        self.agg = env_policy("REPRO_FITNESS_AGG", choices=("mean", "worst"),
+                              default="mean", override=fitness_agg)
+        if isinstance(zoo, GraphBatch):
+            zoo = BucketedZoo.from_batch(zoo)
+        self.zoo = zoo if zoo is not None else build_bucketed_zoo(
+            graphs, buckets)
+        self.n_graphs = self.zoo.n_graphs
+        self.n_nodes = self.zoo.real_sizes()       # per zoo graph
+        self.n_eff = self.zoo.n_eff                # Boltzmann node grid
         self.key = jax.random.PRNGKey(cfg.seed)
 
-        n_features = self.batch.n_features
+        n_features = self.zoo.n_features
         if mode == "ea":
             # PRNG contract unchanged from the EA-only driver: the
             # template is the FIRST key draw, so EA-mode trajectories
@@ -432,24 +453,44 @@ class ZooEGRL(_EvoPopulation):
         else:
             # mirror EGRL: the learner key is drawn first and the SAC
             # actor doubles as the population template
-            self.learner = ZooSAC(self.batch, self._k(), cfg.sac)
-            self.bank = ReplayBank(self.n_graphs, self.n_max,
-                                   seed=cfg.seed)
+            self.learner = ZooSAC(self.zoo, self._k(), cfg.sac)
+            self.bank = ReplayBank(self.zoo.node_slots, seed=cfg.seed)
             self._template = self.learner.actor
         # ---- stacked populations + placement + evolve (_EvoPopulation)
         self._split_population()
         self._init_populations(n_features, self.n_eff, pop_shards)
 
-        gb = self.batch
-        self._pop_logits = jax.jit(lambda pop: gnn.population_logits_zoo(
-            self._template, gb.feats, gb.adj, gb.node_mask, gb.n_nodes,
-            pop))
-        # one key per genome samples all G graphs' sub-actions at once
+        # per-bucket jitted programs: each closure captures ITS bucket's
+        # arrays, so for a single-bucket zoo the traces are exactly the
+        # flat path's; K buckets -> K cached executables per program
+        # (K small and static, so retracing is bounded)
+        def logits_for(b):
+            return jax.jit(lambda pop: gnn.population_logits_zoo(
+                self._template, b.feats, b.adj, b.node_mask, b.n_nodes,
+                pop))
+
+        self._pop_logits = [logits_for(b) for b in self.zoo.buckets]
+        # one key per genome samples all G graphs' sub-actions; with
+        # K > 1 buckets the genome key is split once per bucket
+        # (bucket_keys_batch; K == 1 passes the keys through unchanged)
         self._pop_sample = jax.jit(
             jax.vmap(lambda k, lg: gnn.sample_actions(k, lg)))
-        self._pop_boltz = jax.jit(jax.vmap(
-            lambda k, f: bz.sample(k, bz.from_flat(f, self.n_eff)).reshape(
-                self.n_graphs, self.n_max, 2)))
+        # Boltzmann: ONE flat (n_eff, 2) sample per genome, split into
+        # the per-bucket (G_k, N_max_k, 2) stacks (bucket-major layout;
+        # a single bucket reduces to the flat reshape)
+        offs = np.concatenate(
+            [[0], np.cumsum([b.n_graphs * b.n_max
+                             for b in self.zoo.buckets])])
+
+        def boltz_split(flat):                  # (P, n_eff, 2)
+            return tuple(
+                flat[:, offs[k]:offs[k + 1]].reshape(
+                    -1, b.n_graphs, b.n_max, 2)
+                for k, b in enumerate(self.zoo.buckets))
+
+        self._pop_boltz = jax.jit(lambda ks, pops: boltz_split(
+            jax.vmap(lambda k, f: bz.sample(
+                k, bz.from_flat(f, self.n_eff)))(ks, pops)))
 
         self.steps = 0
         self.best_reward = np.full(self.n_graphs, -np.inf)
@@ -460,21 +501,25 @@ class ZooEGRL(_EvoPopulation):
     def generation(self) -> Dict:
         cfg = self.cfg
         n_g, n_b = self.n_g, self.n_b
+        zoo = self.zoo
+        # parts[name]: per-bucket tuple of (P_pad, G_k, N_max_k, 2)
         parts, results = {}, {}
         real = {"g": n_g, "b": n_b}
         logits_g = None
         if n_g:
-            logits_g = self._pop_logits(self.gnn_pop)  # (P, G, Nmax, 2, 3)
-            parts["g"] = self._pop_sample(_pad_keys(
-                jax.random.split(self._k(), n_g), self.n_g_pad), logits_g)
+            logits_g = [f(self.gnn_pop) for f in self._pop_logits]
+            keys = _pad_keys(jax.random.split(self._k(), n_g), self.n_g_pad)
+            parts["g"] = tuple(
+                self._pop_sample(kc, lg) for kc, lg in
+                zip(bucket_keys_batch(keys, zoo.n_buckets), logits_g))
         if n_b:
             parts["b"] = self._pop_boltz(_pad_keys(
                 jax.random.split(self._k(), n_b), self.n_b_pad), self.bz_pop)
         if self.mode != "ea":
             parts["pg"] = self.learner.explore_actions(cfg.pg_rollouts)
-        for name, maps in parts.items():   # maps (P_pad, G, N_max, 2)
-            results[name] = evaluate_population_zoo(
-                self.batch, maps, cfg.reward_scale)
+        for name, maps in parts.items():
+            results[name] = evaluate_population_bucketed(
+                zoo, maps, cfg.reward_scale)   # (P_pad, G) zoo order
 
         # ---- EA step on the aggregate fitness, still on device
         empty = jnp.zeros((0,), jnp.float32)
@@ -485,7 +530,10 @@ class ZooEGRL(_EvoPopulation):
                 self._k(),
                 self.gnn_pop, fit.get("g", empty),
                 self.bz_pop, fit.get("b", empty),
-                logits_g.reshape(self.n_g_pad, self.n_eff, 2, 3)
+                # Boltzmann-seeding grid: bucket-major (P, n_eff, 2, 3),
+                # matching the bz genome layout (flat reshape at K = 1)
+                jnp.concatenate([lg.reshape(self.n_g_pad, -1, 2, 3)
+                                 for lg in logits_g], axis=1)
                 if logits_g is not None
                 else jnp.zeros((0, self.n_eff, 2, 3)))
 
@@ -494,29 +542,39 @@ class ZooEGRL(_EvoPopulation):
             a = np.asarray(x)
             return a[:real[name]] if name in real else a
 
-        rewards = np.concatenate(    # (P, G)
+        rewards = np.concatenate(    # (P, G) zoo order
             [np_real(n, results[n]["reward"]) for n in parts])
         fitness = np.concatenate([np_real(n, fit[n]) for n in parts])
         valid = np.concatenate(
             [np_real(n, results[n]["valid"]) for n in parts])
-        maps_np = np.concatenate([np_real(n, m) for n, m in parts.items()])
+        # per-bucket host copies of the rollout rows (real rows only)
+        maps_np = {name: [np_real(name, m) for m in bucket_maps]
+                   for name, bucket_maps in parts.items()}
         self.steps += rewards.size          # one env step per (genome, graph)
+        # per-graph action stacks in the SAME part order as `rewards`
+        # rows (g, b, pg) — graph gi's rows live at its (bucket, slot)
+        acts_by_graph = [
+            np.concatenate([maps_np[name][zoo.graph_bucket[gi]]
+                            [:, zoo.graph_slot[gi]] for name in parts])
+            for gi in range(self.n_graphs)]
         for gi in range(self.n_graphs):
             b = int(np.argmax(rewards[:, gi]))
             if rewards[b, gi] > self.best_reward[gi]:
                 self.best_reward[gi] = float(rewards[b, gi])
-                self.best_mapping[gi] = maps_np[
-                    b, gi, :int(self.batch.n_nodes[gi])].copy()
+                self.best_mapping[gi] = acts_by_graph[gi][
+                    b, :self.n_nodes[gi]].copy()
         self.best_fitness = max(self.best_fitness, float(fitness.max()))
 
         # ---- PG member: bank insert, one batched zoo-wide gradient
-        # step per rollout row (the update scan consumes a (G, B) batch
-        # per step, so this matches EGRL's one-step-per-env-step budget
-        # at the row level), then migration into the last real GNN slot
+        # step per rollout row (the update scan consumes a per-bucket
+        # (G_k, B) batch per step, so this matches EGRL's
+        # one-step-per-env-step budget at the row level), then
+        # migration into the last real GNN slot
         info = {}
         if self.mode != "ea":
-            self.bank.add_batch(maps_np, rewards)
-            info = self.learner.update(self.bank, len(maps_np))
+            for gi in range(self.n_graphs):
+                self.bank.add_graph(gi, acts_by_graph[gi], rewards[:, gi])
+            info = self.learner.update(self.bank, len(rewards))
             if self.mode == "egrl" and n_g > self.e_g:
                 self.gnn_pop = self._migrate(
                     self.gnn_pop, gnn.flatten_params(self.learner.actor))
@@ -529,7 +587,7 @@ class ZooEGRL(_EvoPopulation):
             "valid_frac": float(valid.mean()),
             "best_reward_per_graph": {
                 name: float(self.best_reward[i])
-                for i, name in enumerate(self.batch.names)},
+                for i, name in enumerate(zoo.names)},
             **info,
         }
         self.history.append(rec)
@@ -577,22 +635,33 @@ def evaluate_gnn_on(graph: WorkloadGraph, vec: np.ndarray,
 
 def evaluate_gnn_zoo(graphs: Sequence[WorkloadGraph], vec: np.ndarray,
                      samples: int = 8, seed: int = 0,
-                     batch: Optional[GraphBatch] = None):
+                     batch=None):
     """Zero-shot transfer (Fig 5) over a whole workload zoo through the
-    batched path: ONE masked zoo forward + one zoo-wide population
-    evaluation score ``samples`` stochastic rollouts (plus the greedy
-    mapping) on EVERY graph at once, replacing the per-graph
-    ``evaluate_gnn_on`` loop of the sweep.  Returns {graph name: best
-    speedup}.  Pass ``batch`` to reuse a prebuilt ``GraphBatch`` (e.g.
-    the one a ``ZooEGRL`` trained against)."""
-    gb = batch if batch is not None else build_graph_batch(graphs)
-    template = gnn.init_gnn(jax.random.PRNGKey(0), gb.n_features)
+    bucketed path: one masked zoo forward + one population evaluation
+    PER SIZE BUCKET score ``samples`` stochastic rollouts (plus the
+    greedy mapping) on every graph — each bucket padded only to its own
+    N_max_k, so the sweep no longer pays the biggest graph's width for
+    the small ones.  Returns {graph name: best speedup} in zoo order.
+    Pass ``batch`` to reuse a prebuilt ``BucketedZoo`` (e.g. the one a
+    ``ZooEGRL`` trained against) or a flat ``GraphBatch`` (wrapped as
+    one bucket — the pre-bucketing behavior, bit-identical)."""
+    if batch is None:
+        zoo = build_bucketed_zoo(graphs)
+    elif isinstance(batch, GraphBatch):
+        zoo = BucketedZoo.from_batch(batch)
+    else:
+        zoo = batch
+    template = gnn.init_gnn(jax.random.PRNGKey(0), zoo.n_features)
     params = gnn.unflatten_params(template, jnp.asarray(vec))
-    logits = gnn.gnn_forward_zoo(params, gb.feats, gb.adj, gb.node_mask,
-                                 gb.n_nodes)           # (G, N_max, 2, 3)
+    logits = gnn.gnn_forward_bucketed(params, zoo.buckets)
+    # the same seed keys roll every bucket (one stochastic policy
+    # rollout = one sample index across the whole zoo, as the flat
+    # path had it; K == 1 draws exactly the flat stream)
     keys = jax.random.split(jax.random.PRNGKey(seed), samples)
-    acts = jax.vmap(lambda k: gnn.sample_actions(k, logits))(keys)
-    acts = jnp.concatenate([acts, gnn.greedy_actions(logits)[None]], 0)
-    res = evaluate_population_zoo(gb, acts)            # (S+1, G) arrays
+    acts = []
+    for lg in logits:
+        a = jax.vmap(lambda k: gnn.sample_actions(k, lg))(keys)
+        acts.append(jnp.concatenate([a, gnn.greedy_actions(lg)[None]], 0))
+    res = evaluate_population_bucketed(zoo, acts)      # (S+1, G) arrays
     best = np.asarray(res["speedup"]).max(axis=0)
-    return {name: float(best[i]) for i, name in enumerate(gb.names)}
+    return {name: float(best[i]) for i, name in enumerate(zoo.names)}

@@ -210,6 +210,28 @@ def population_logits_zoo(template, feats, adj, node_mask, n_nodes,
         backend))(pop_matrix)
 
 
+def gnn_forward_bucketed(p, buckets, backend=None):
+    """Zoo forward over a size-bucketed zoo: one ``gnn_forward_zoo``
+    call per bucket — each padded only to its own N_max_k, so the dense
+    attention work shrinks to bucket size.  ``buckets`` is any sequence
+    of GraphBatch-shaped batches (e.g. ``BucketedZoo.buckets``); returns
+    a tuple of (G_k, N_max_k, 2, 3) logits.  Under jit each bucket shape
+    traces once — K executables total, K small and static."""
+    return tuple(gnn_forward_zoo(p, b.feats, b.adj, b.node_mask, b.n_nodes,
+                                 backend) for b in buckets)
+
+
+def population_logits_bucketed(template, buckets, pop_matrix, backend=None):
+    """Stacked-population forward per bucket: (P, V) flat params ->
+    tuple of (P, G_k, N_max_k, 2, 3).  Each per-bucket call is the same
+    pure vmap as ``population_logits_zoo``, so a ("pop",)-sharded
+    ``pop_matrix`` still partitions shard-locally under auto-SPMD —
+    bucketing composes with population sharding bucket by bucket."""
+    return tuple(population_logits_zoo(template, b.feats, b.adj, b.node_mask,
+                                       b.n_nodes, pop_matrix, backend)
+                 for b in buckets)
+
+
 def greedy_actions(logits):
     return jnp.argmax(logits, axis=-1).astype(jnp.int32)  # (N, 2)
 

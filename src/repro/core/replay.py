@@ -3,12 +3,16 @@ the mixed population lands here; the SAC learner samples from it. The
 state (workload graph) is constant within a task, so entries store only
 (action, reward).
 
-``ReplayBank`` is the multi-workload form: one ``ReplayBuffer`` per zoo
-graph, filled from the stacked ``(P, G, N_max, 2)`` rollouts of a
-``ZooEGRL`` generation and sampled back into ONE ``(steps, G, B, ...)``
-stack so the ZooSAC update scan trains against the whole zoo per jitted
-device call (core/sac.py)."""
+``ReplayBank`` is the multi-workload form: one ``ReplayBuffer`` per ZOO
+INDEX — buffer i always belongs to zoo graph i regardless of how the
+zoo is size-bucketed, and stores that graph's rollout rows at its own
+bucket's padded width ``node_slots[i]``.  A ``ZooEGRL`` generation
+inserts per graph (``add_graph``); the ZooSAC update samples per bucket
+(``sample_bucket``) into ``(steps, G_k, B, N_max_k, 2)`` stacks, so the
+critic's attention tensors shrink to bucket size (core/sac.py)."""
 from __future__ import annotations
+
+from typing import Sequence
 
 import numpy as np
 
@@ -51,44 +55,63 @@ class ReplayBuffer:
 
 
 class ReplayBank:
-    """Per-graph replay for the workload zoo (see module docstring).
+    """Per-zoo-index replay for the workload zoo (see module docstring).
 
-    Buffers store the PADDED (N_max, 2) action rows exactly as the zoo
-    rollouts produce them, so sampling needs no re-padding.  Buffer i is
-    seeded ``seed + i`` — decorrelated index streams across graphs, and
-    a one-graph bank reproduces a ``ReplayBuffer(seed=seed)`` sample
-    stream exactly (the ZooSAC G=1 parity contract).
+    ``node_slots[i]`` is the padded action-row width of zoo graph i
+    (its bucket's N_max_k); buffers store exactly what the bucketed
+    rollouts produce, so sampling needs no re-padding.  Buffer i is
+    seeded ``seed + i`` — an index stream keyed by ZOO position, stable
+    under any bucketing policy — and a one-graph bank reproduces a
+    ``ReplayBuffer(seed=seed)`` sample stream exactly (the ZooSAC G=1
+    parity contract).
     """
 
-    def __init__(self, n_graphs: int, n_nodes: int, capacity: int = 100_000,
+    def __init__(self, node_slots: Sequence[int], capacity: int = 100_000,
                  seed: int = 0):
-        self.buffers = [ReplayBuffer(n_nodes, capacity, seed + i)
-                        for i in range(n_graphs)]
-        self.n_nodes = n_nodes
+        self.node_slots = tuple(int(n) for n in node_slots)
+        self.buffers = [ReplayBuffer(n, capacity, seed + i)
+                        for i, n in enumerate(self.node_slots)]
+
+    def add_graph(self, i: int, actions, rewards):
+        """One zoo graph's generation rows: actions (P, node_slots[i],
+        2), rewards (P,) into buffer i."""
+        self.buffers[i].add_batch(actions, rewards)
 
     def add_batch(self, actions, rewards):
-        """One generation's rollouts: actions (P, G, N_max, 2),
-        rewards (P, G) — row p of graph g lands in buffer g."""
+        """Uniform-width insert: actions (P, G, N_max, 2), rewards
+        (P, G) — row p of graph g lands in buffer g.  Only valid when
+        every graph shares one padded width (single-bucket zoos)."""
         actions = np.asarray(actions)
         rewards = np.asarray(rewards)
         for i, buf in enumerate(self.buffers):
             buf.add_batch(actions[:, i], rewards[:, i])
 
-    def sample_stack(self, batch: int, steps: int):
-        """(steps, G, batch, N_max, 2) int32 actions + (steps, G, batch)
-        float32 rewards: one (G, batch) zoo batch per gradient step.
-        Per (step, graph) the draw order matches the single-buffer
-        ``[buf.sample(batch) for _ in range(steps)]`` sequence."""
-        n_graphs = len(self.buffers)
-        acts = np.empty((steps, n_graphs, batch, self.n_nodes, 2), np.int32)
-        rews = np.empty((steps, n_graphs, batch), np.float32)
+    def sample_bucket(self, indices: Sequence[int], batch: int, steps: int):
+        """(steps, len(indices), batch, N_k, 2) int32 actions +
+        (steps, len(indices), batch) float32 rewards for one bucket's
+        zoo indices (all sharing one padded width).  Each buffer's draw
+        stream is its own seeded rng, so the per-buffer sequence is
+        independent of bucket iteration order — sampling per bucket
+        draws exactly what a flat per-zoo sweep would."""
+        widths = {self.node_slots[i] for i in indices}
+        assert len(widths) == 1, f"mixed widths in one bucket: {widths}"
+        acts = np.empty((steps, len(indices), batch, widths.pop(), 2),
+                        np.int32)
+        rews = np.empty((steps, len(indices), batch), np.float32)
         for u in range(steps):
-            for i, buf in enumerate(self.buffers):
-                acts[u, i], rews[u, i] = buf.sample(batch)
+            for j, i in enumerate(indices):
+                acts[u, j], rews[u, j] = self.buffers[i].sample(batch)
         return acts, rews
+
+    def sample_stack(self, batch: int, steps: int):
+        """Uniform-width form of ``sample_bucket`` over the whole zoo:
+        (steps, G, batch, N_max, 2) + (steps, G, batch).  Per (step,
+        graph) the draw order matches the single-buffer
+        ``[buf.sample(batch) for _ in range(steps)]`` sequence."""
+        return self.sample_bucket(range(len(self.buffers)), batch, steps)
 
     def __len__(self):
         """Transitions available in EVERY graph's buffer (they fill in
-        lockstep under ``add_batch``, so this is just buffer 0's size —
-        min() keeps it honest for hand-filled banks)."""
+        lockstep under the zoo drivers, so this is just buffer 0's size
+        — min() keeps it honest for hand-filled banks)."""
         return min((len(b) for b in self.buffers), default=0)

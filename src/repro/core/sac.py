@@ -17,12 +17,17 @@ Two learners share the same losses and the same one-jitted-scan update
 - ``SACLearner`` — the per-graph policy-gradient member of ``EGRL``,
   unchanged single-graph forms;
 - ``ZooSAC`` — the multi-workload member of ``ZooEGRL``: actor and
-  double-Q critic run over the padded ``GraphBatch`` (masked zoo GNN
-  forward + ``critic_forward_masked``), trained on one ``(G, B)`` replay
-  batch per gradient step sampled from a per-graph ``ReplayBank``.  Its
-  losses are the per-graph SACLearner losses averaged over the zoo, so a
-  one-graph batch reduces to ``SACLearner`` exactly (to ~1e-6, see
-  tests/test_zoo_egrl.py) — the single-graph learner is the G=1 case.
+  double-Q critic run over a size-bucketed zoo (``BucketedZoo``, PR 5) —
+  per gradient step, each bucket contributes a ``(G_k, B)`` replay batch
+  evaluated at ITS OWN padded width, so the critic's dense attention
+  tensors are ``(G_k, B, N_max_k, N_max_k)`` instead of zoo-wide
+  ``N_max``.  The scan's per-step inputs are pytrees (one array per
+  bucket); losses are the per-graph SACLearner losses averaged over the
+  whole zoo, so a one-graph batch reduces to ``SACLearner`` exactly (to
+  ~1e-6, see tests/test_zoo_egrl.py) — the single-graph learner is the
+  G=1 case, and a single-bucket zoo consumes its PRNG keys unchanged
+  (``bucket_keys``), keeping those trajectories bit-identical to the
+  flat ``GraphBatch`` path.
 """
 from __future__ import annotations
 
@@ -37,6 +42,7 @@ import jax.numpy as jnp
 from repro.core import gnn
 from repro.core.replay import ReplayBank, ReplayBuffer
 from repro.graphs.batch import GraphBatch
+from repro.graphs.bucketed import BucketedZoo, bucket_keys
 from repro.utils.params import ParamDef, init_params
 
 
@@ -122,14 +128,15 @@ def _make_update_scan(cfg: SACConfig, critic_loss, actor_loss):
     the single-graph and the zoo learner: per step, one critic Adam step
     on the noisy one-hot behavioral actions, then one actor Adam step
     through the updated critic.  ``acts`` / ``rewards`` / ``noise``
-    carry a leading (steps,) axis; the loss callables define the
-    per-step batch shape."""
+    carry a leading (steps,) axis and may be pytrees (ZooSAC passes one
+    array per size bucket — lax.scan slices every leaf); the loss
+    callables define the per-step batch shape."""
 
     def update_scan(actor, critic, oa, oc, acts, rewards, noise):
         def step(carry, xs):
             actor, critic, oa, oc = carry
             a_, r_, nz = xs
-            oh = jax.nn.one_hot(a_, 3) + nz
+            oh = jax.tree.map(lambda a, n: jax.nn.one_hot(a, 3) + n, a_, nz)
             closs, cg = jax.value_and_grad(critic_loss)(critic, oh, r_)
             critic, oc = _adam_step(cfg.lr_critic, critic, cg, oc)
             (aloss, ent), ag = jax.value_and_grad(
@@ -214,99 +221,136 @@ class SACLearner:
 
 
 class ZooSAC:
-    """Multi-workload SAC learner over a padded ``GraphBatch`` — the PG
+    """Multi-workload SAC learner over a size-bucketed zoo — the PG
     member of ``ZooEGRL``.
 
-    The actor is the masked zoo GNN forward (``gnn.gnn_forward_zoo``);
-    the double-Q critic is ``critic_forward_masked`` evaluated per
-    graph.  Each gradient step trains on one ``(G, B)`` batch — B
-    transitions from EVERY workload's replay buffer (``ReplayBank``) —
-    and all steps of a generation run in one jitted ``lax.scan``
-    (``_make_update_scan``), so the per-step gradient cost that
+    The actor is the masked zoo GNN forward (``gnn.gnn_forward_zoo``)
+    run once per bucket; the double-Q critic is
+    ``critic_forward_masked`` evaluated per graph at its bucket's
+    padded width.  Each gradient step trains on one ``(G_k, B)`` batch
+    per bucket — B transitions from EVERY workload's replay buffer
+    (``ReplayBank``, keyed by zoo index) — and all steps of a
+    generation run in one jitted ``lax.scan`` (``_make_update_scan``
+    with per-bucket pytree inputs), so the per-step gradient cost that
     dominates ``generation.egrl_ms`` is amortized across the whole zoo
-    in one device call instead of paid per graph.
+    in one device call AND the dense ``(N, N)`` attention work shrinks
+    from zoo-wide ``N_max`` to bucket size.
 
-    Losses are the per-graph ``SACLearner`` losses averaged over the zoo
-    (equal weight per workload).  On a one-graph batch the PRNG streams
-    (init split, PRNGKey(17) noise/sampling chain) and the replay draw
-    order coincide with ``SACLearner``'s, so losses and updated
-    parameters match to ~1e-6 — enforced by tests/test_zoo_egrl.py.
-    Critic parameters are graph-size independent (shared GAT weights +
-    masked mean pool), exactly like the actor's.
+    Losses are the per-graph ``SACLearner`` losses averaged over the
+    whole zoo (equal weight per workload; per-graph terms are
+    concatenated bucket-major before the mean, which for a
+    single-bucket zoo is exactly the flat path's graph order).  On a
+    one-graph batch the PRNG streams (init split, PRNGKey(17)
+    noise/sampling chain via ``bucket_keys`` — a K==1 zoo consumes keys
+    UNCHANGED) and the replay draw order coincide with ``SACLearner``'s,
+    so losses and updated parameters match to ~1e-6 — enforced by
+    tests/test_zoo_egrl.py.  Critic parameters are graph-size
+    independent (shared GAT weights + masked mean pool), exactly like
+    the actor's.
     """
 
-    def __init__(self, batch: GraphBatch, key, cfg: SACConfig = SACConfig()):
+    def __init__(self, zoo, key, cfg: SACConfig = SACConfig()):
+        if isinstance(zoo, GraphBatch):      # flat batch = one bucket
+            zoo = BucketedZoo.from_batch(zoo)
         self.cfg = cfg
-        self.batch = batch
+        self.zoo = zoo
         k1, k2 = jax.random.split(key)
-        self.actor = gnn.init_gnn(k1, batch.n_features)
-        self.critic = init_params(critic_defs(batch.n_features), k2)
+        self.actor = gnn.init_gnn(k1, zoo.n_features)
+        self.critic = init_params(critic_defs(zoo.n_features), k2)
         self.opt_a = _adam_init(self.actor)
         self.opt_c = _adam_init(self.critic)
         self.key = jax.random.PRNGKey(17)
 
-        feats, adj = batch.feats, batch.adj
-        live, nreal = batch.node_mask, batch.n_nodes
+        buckets = tuple((b.feats, b.adj, b.node_mask, b.n_nodes)
+                        for b in zoo.buckets)
+        n_buckets = zoo.n_buckets
         alpha = cfg.alpha
+        # zoo indices per bucket, slot order (for the replay sampler)
+        self._bucket_ids = tuple(
+            tuple(i for i in range(zoo.n_graphs)
+                  if zoo.graph_bucket[i] == k) for k in range(n_buckets))
 
         def critic_loss(cp, acts_oh, rewards):
-            # acts_oh (G, B, N_max, 2, 3) noisy/soft one-hots from every
-            # workload's replay buffer; rewards (G, B)
+            # acts_oh: per-bucket (G_k, B, N_max_k, 2, 3) noisy/soft
+            # one-hots; rewards: per-bucket (G_k, B).  Zoo mean = mean
+            # over the concatenated per-graph losses (equal weight per
+            # workload, any bucketing).
             def one_graph(f, a, m, oh_b, r_b):
                 q1, q2 = jax.vmap(
                     lambda oh: critic_forward_masked(cp, f, a, m, oh))(oh_b)
                 return jnp.mean((q1 - r_b) ** 2 + (q2 - r_b) ** 2)
 
-            return jnp.mean(jax.vmap(one_graph)(
-                feats, adj, live, acts_oh, rewards))
+            losses = [jax.vmap(one_graph)(fe, ad, li, oh_k, r_k)
+                      for (fe, ad, li, _), oh_k, r_k
+                      in zip(buckets, acts_oh, rewards)]
+            return jnp.mean(jnp.concatenate(losses))
 
         def actor_loss(ap, cp):
             # "jnp" backend: differentiated through (see critic_forward)
-            logits = gnn.gnn_forward_zoo(ap, feats, adj, live, nreal,
-                                         backend="jnp")   # (G, N_max, 2, 3)
-            probs = jax.nn.softmax(logits, axis=-1)
-
             def one_graph(f, a, m, lg, pr):
                 q1, q2 = critic_forward_masked(cp, f, a, m, pr)
                 return jnp.minimum(q1, q2), gnn.entropy_masked(lg, m)
 
-            qmin, ent = jax.vmap(one_graph)(feats, adj, live, logits, probs)
-            ent = jnp.mean(ent)
-            return -(jnp.mean(qmin) + alpha * ent), ent
+            qs, ents = [], []
+            for fe, ad, li, nr in buckets:
+                logits = gnn.gnn_forward_zoo(ap, fe, ad, li, nr,
+                                             backend="jnp")
+                probs = jax.nn.softmax(logits, axis=-1)
+                q, e = jax.vmap(one_graph)(fe, ad, li, logits, probs)
+                qs.append(q)
+                ents.append(e)
+            ent = jnp.mean(jnp.concatenate(ents))
+            return -(jnp.mean(jnp.concatenate(qs)) + alpha * ent), ent
 
-        # acts (U, G, B, N_max, 2); rewards (U, G, B); noise adds (3,)
+        # acts: per-bucket (U, G_k, B, N_max_k, 2); rewards (U, G_k, B);
+        # noise adds (3,) — all tuples, scanned leaf-wise
         self._update_scan = _make_update_scan(cfg, critic_loss, actor_loss)
-        self._logits = jax.jit(lambda ap: gnn.gnn_forward_zoo(
-            ap, feats, adj, live, nreal))
+        self._logits = jax.jit(lambda ap: tuple(
+            gnn.gnn_forward_zoo(ap, fe, ad, li, nr)
+            for fe, ad, li, nr in buckets))
+
+        def sample_one(ap, k):
+            ks = bucket_keys(k, n_buckets)
+            return tuple(gnn.sample_actions(kk, gnn.gnn_forward_zoo(
+                ap, fe, ad, li, nr))
+                for kk, (fe, ad, li, nr) in zip(ks, buckets))
+
         self._sample_batch = jax.jit(
-            lambda ap, ks: jax.vmap(lambda k: gnn.sample_actions(
-                k, gnn.gnn_forward_zoo(ap, feats, adj, live, nreal)))(ks))
+            lambda ap, ks: jax.vmap(lambda k: sample_one(ap, k))(ks))
 
     def policy_logits(self, params=None):
-        """(G, N_max, 2, 3) zoo logits (padding rows forced to 0)."""
+        """Per-bucket (G_k, N_max_k, 2, 3) zoo logits tuple (padding
+        rows forced to 0)."""
         return self._logits(self.actor if params is None else params)
 
-    def explore_actions(self, n: int) -> jnp.ndarray:
-        """(n, G, N_max, 2) rollout actions as ONE jitted device call:
-        each key samples every graph's sub-actions at once (padding rows
-        sample throwaway uniform actions — inert downstream)."""
+    def explore_actions(self, n: int):
+        """Per-bucket (n, G_k, N_max_k, 2) rollout-action tuple as ONE
+        jitted device call: each key samples every graph's sub-actions
+        at once (a K==1 zoo consumes the key unchanged — bit-identical
+        to the flat path; padding rows sample throwaway uniform actions
+        — inert downstream)."""
         self.key, k = jax.random.split(self.key)
         return self._sample_batch(self.actor, jax.random.split(k, n))
 
     def update(self, bank: ReplayBank, steps: int) -> Dict[str, float]:
         """``steps`` zoo-wide gradient steps in one jitted scan, each on
-        a fresh ``(G, B)`` replay batch from the bank."""
+        a fresh per-bucket ``(G_k, B)`` replay batch from the bank."""
         cfg = self.cfg
         if len(bank) < cfg.batch or steps <= 0:
             return {}
-        acts, rews = bank.sample_stack(cfg.batch, steps)
+        acts, rews = [], []
+        for ids in self._bucket_ids:
+            a, r = bank.sample_bucket(ids, cfg.batch, steps)
+            acts.append(jnp.asarray(a))
+            rews.append(jnp.asarray(r))
         self.key, k = jax.random.split(self.key)
-        noise = jnp.clip(
-            cfg.action_noise * jax.random.normal(k, acts.shape + (3,)),
+        noise = tuple(jnp.clip(
+            cfg.action_noise * jax.random.normal(kk, a.shape + (3,)),
             -cfg.noise_clip, cfg.noise_clip)
+            for kk, a in zip(bucket_keys(k, self.zoo.n_buckets), acts))
         (self.actor, self.critic, self.opt_a, self.opt_c,
          cl, al, en) = self._update_scan(
             self.actor, self.critic, self.opt_a, self.opt_c,
-            jnp.asarray(acts), jnp.asarray(rews), noise)
+            tuple(acts), tuple(rews), noise)
         return {"critic_loss": float(cl), "actor_loss": float(al),
                 "entropy": float(en)}

@@ -45,7 +45,6 @@ argument to ``EGRL``):
 from __future__ import annotations
 
 import dataclasses
-import os
 from typing import Optional, Tuple, Union
 
 import jax
@@ -53,6 +52,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec
 
 from repro.core.ea import POP_AXIS
 from repro.launch.mesh import make_pop_mesh
+from repro.utils.envpolicy import env_policy
 
 
 def _round_up(n: int, m: int) -> int:
@@ -94,20 +94,22 @@ def resolve_pop_sharding(n_g: int, n_b: int,
     """Resolve the shard count for an (n_g, n_b) population split.
 
     ``requested`` overrides the ``REPRO_POP_SHARDS`` env var; see the
-    module docstring for the accepted values.
+    module docstring for the accepted values.  Unknown values fail loud
+    through the shared ``repro.utils.envpolicy`` resolver (valid options
+    listed in the error), like every other REPRO_* policy.
     """
-    req = requested if requested is not None else \
-        os.environ.get("REPRO_POP_SHARDS", "auto")
-    req = str(req).strip().lower()
+    req = env_policy("REPRO_POP_SHARDS",
+                     choices=("auto", "", "off", "0", "1"),
+                     default="auto", override=requested, int_ok=True)
     if n_g + n_b == 0:                      # pure-PG mode: nothing to shard
         return PopSharding(None, 1)
     n_dev = len(jax.devices())
     if req in ("auto", ""):
         n = min(n_dev, max(n_g, n_b, 1))
-    elif req in ("0", "1", "off"):
+    elif req in ("off", "0", "1"):
         n = 1
     else:
-        n = int(req)
+        n = req                             # an integer >= 1
         if n > n_dev:
             raise ValueError(
                 f"REPRO_POP_SHARDS={n} but only {n_dev} device(s) visible")

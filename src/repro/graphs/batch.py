@@ -72,6 +72,12 @@ class GraphBatch:
     def n_features(self) -> int:
         return self.feats.shape[-1]
 
+    @property
+    def w_max(self) -> int:
+        """Release-ring width this batch was padded to (the batch-wide
+        max activation lifetime; see the module docstring)."""
+        return self.sim.ring_init.shape[-2]
+
     def graph_sim(self, i: int) -> SimGraph:
         """The i-th graph's padded SimGraph slice (host-side helper for
         tests/tools that want to run the per-graph path or the numpy

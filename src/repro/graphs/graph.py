@@ -112,6 +112,16 @@ class WorkloadGraph:
             "producers_of": consumers,
         }
 
+    def ring_width(self) -> int:
+        """Max activation lifetime W = max(last_consumer[t] - t) + 1 — the
+        rectifier's release-ring width — straight from the edge list.
+        O(E) on the host, no SimGraph build: cheap enough for bucket
+        assignment over a whole registry (graphs/bucketed.py)."""
+        last = np.arange(self.n)
+        for s, d in self.edges:
+            last[s] = max(last[s], d)
+        return int((last - np.arange(self.n)).max()) + 1
+
     def validate(self):
         for s, d in self.edges:
             assert 0 <= s < d < self.n, (s, d, "edges must be topo-ordered")

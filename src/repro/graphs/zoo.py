@@ -250,8 +250,136 @@ def dense_cnn(blocks: int = 8, layers_per_block: int = 62,
     return g
 
 
+# ------------------------------------------------------ small workloads
+# <200-node graphs giving the zoo real small-size classes: without them
+# the BucketedZoo (graphs/bucketed.py) has nothing to peel away from the
+# 1k-node synthetics, and the padding-tax win is untestable.
+
+def _dwconv(c, hw_in, k, stride=1) -> Node:
+    """Depthwise conv: per-channel kernels (groups == channels)."""
+    hw_out = hw_in // stride
+    return Node(op="conv", weight_bytes=2.0 * c * k * k,
+                ifm=(hw_in, hw_in, c), ofm=(hw_out, hw_out, c),
+                flops=2.0 * c * k * k * hw_out * hw_out,
+                kernel=(k, k), stride=stride, pad=k // 2, groups=c)
+
+
+def mobilenet_v2() -> WorkloadGraph:
+    """MobileNet-V2-style inverted-residual CNN (65 nodes): tiny weights,
+    activation-dominated — the opposite placement regime from the
+    weight-heavy transformers, in the smallest zoo size class."""
+    nodes: List[Node] = []
+    edges: List[Tuple[int, int]] = []
+
+    def add(node: Node, srcs: List[int]) -> int:
+        idx = len(nodes)
+        nodes.append(node)
+        for s in srcs:
+            edges.append((s, idx))
+        return idx
+
+    i = add(Node(op="input", ifm=(224, 224, 3), ofm=(224, 224, 3)), [])
+    i = add(_conv(3, 32, 224, 3, stride=2), [i])
+    hw, c = 112, 32
+    # (expand t, c_out, repeats, first stride) per stage, per the paper
+    for t, cout, reps, s in ((1, 16, 1, 1), (6, 24, 2, 2), (6, 32, 3, 2),
+                             (6, 64, 4, 2), (6, 96, 3, 1), (6, 160, 3, 2),
+                             (6, 320, 1, 1)):
+        for b in range(reps):
+            stride = s if b == 0 else 1
+            inp, hidden = i, c * t
+            j = add(_conv(c, hidden, hw, 1), [inp]) if t != 1 else inp
+            j = add(_dwconv(hidden, hw, 3, stride), [j])
+            j = add(_conv(hidden, cout, hw // stride, 1), [j])
+            if stride == 1 and c == cout:    # identity residual
+                j = add(Node(op="add", ifm=(hw, hw, c), ofm=(hw, hw, c),
+                             flops=float(hw * hw * c)), [inp, j])
+            i, hw, c = j, hw // stride, cout
+    i = add(_conv(c, 1280, hw, 1), [i])
+    i = add(Node(op="pool", ifm=(hw, hw, 1280), ofm=(1, 1, 1280),
+                 flops=float(hw * hw * 1280), kernel=(hw, hw)), [i])
+    add(Node(op="fc", weight_bytes=2.0 * 1280 * 1000, ifm=(1, 1, 1280),
+             ofm=(1, 1, 1000), flops=2.0 * 1280 * 1000), [i])
+    g = WorkloadGraph("mobilenet_v2", nodes, edges)
+    g.validate()
+    return g
+
+
+def tiny_gpt(seq: int = 128, layers: int = 6, d: int = 512,
+             heads: int = 4) -> WorkloadGraph:
+    """GPT-style decoder stack at toy scale (123 nodes at the defaults):
+    the BERT op mix one size class down, so the small buckets carry a
+    transformer shape too, not just CNNs.  ~55 MB of weights — more
+    than VMEM holds — so constant fast-tier mappings still spill (the
+    rectifier's capacity pressure exists even in the small bucket);
+    ``mobilenet_v2`` is the opposite: it fits a fast tier whole."""
+    nodes: List[Node] = []
+    edges: List[Tuple[int, int]] = []
+
+    def add(node: Node, srcs: List[int]) -> int:
+        idx = len(nodes)
+        nodes.append(node)
+        for s in srcs:
+            edges.append((s, idx))
+        return idx
+
+    hd = d // heads
+    i = add(Node(op="embed", weight_bytes=2.0 * 8192 * d, ifm=(seq, 1, 1),
+                 ofm=(seq, 1, d), flops=seq * d,
+                 weight_access_frac=seq / 8192.0), [])
+    i = add(Node(op="norm_proj", weight_bytes=2.0 * 2 * d, ifm=(seq, 1, d),
+                 ofm=(seq, 1, d), flops=5.0 * seq * d), [i])
+    for _ in range(layers):
+        inp = i
+        q, k, v = (add(Node(op="qkv", weight_bytes=2.0 * d * d,
+                            ifm=(seq, 1, d), ofm=(seq, 1, d),
+                            flops=2.0 * seq * d * d), [inp])
+                   for _ in range(3))
+        head_outs = []
+        for _ in range(heads):
+            s_ = add(Node(op="attn", ifm=(seq, 1, hd), ofm=(seq, seq, 1),
+                          flops=2.0 * seq * seq * hd, groups=heads), [q, k])
+            sm = add(Node(op="softmax", ifm=(seq, seq, 1), ofm=(seq, seq, 1),
+                          flops=5.0 * seq * seq), [s_])
+            av = add(Node(op="attn", ifm=(seq, seq, 1), ofm=(seq, 1, hd),
+                          flops=2.0 * seq * seq * hd), [sm, v])
+            head_outs.append(av)
+        o = add(Node(op="o_proj", weight_bytes=2.0 * d * d, ifm=(seq, 1, d),
+                     ofm=(seq, 1, d), flops=2.0 * seq * d * d), head_outs)
+        n1 = add(Node(op="norm_proj", weight_bytes=2.0 * 2 * d,
+                      ifm=(seq, 1, d), ofm=(seq, 1, d), flops=5.0 * seq * d),
+                 [o, inp])
+        f1 = add(Node(op="mlp", weight_bytes=2.0 * d * 4 * d, ifm=(seq, 1, d),
+                      ofm=(seq, 1, 4 * d), flops=2.0 * seq * d * 4 * d), [n1])
+        f2 = add(Node(op="mlp", weight_bytes=2.0 * 4 * d * d,
+                      ifm=(seq, 1, 4 * d), ofm=(seq, 1, d),
+                      flops=2.0 * seq * d * 4 * d), [f1])
+        i = add(Node(op="norm_proj", weight_bytes=2.0 * 2 * d, ifm=(seq, 1, d),
+                     ofm=(seq, 1, d), flops=5.0 * seq * d), [f2, n1])
+    add(Node(op="lm_head", weight_bytes=2.0 * d * 8192, ifm=(seq, 1, d),
+             ofm=(1, 1, 8192), flops=2.0 * d * 8192), [i])
+    g = WorkloadGraph("tiny_gpt", nodes, edges)
+    g.validate()
+    return g
+
+
 PAPER_WORKLOADS = {"resnet50": resnet50, "resnet101": resnet101, "bert": bert}
 SYNTH_WORKLOADS = {"moe_transformer": moe_transformer, "dense_cnn": dense_cnn}
+SMALL_WORKLOADS = {"mobilenet_v2": mobilenet_v2, "tiny_gpt": tiny_gpt}
 # the full registry the workload-batch subsystem (graphs/batch.py,
-# benchmarks bench_zoo_eval) evaluates against
-WORKLOADS = {**PAPER_WORKLOADS, **SYNTH_WORKLOADS}
+# graphs/bucketed.py, benchmarks bench_zoo_eval) evaluates against
+WORKLOADS = {**PAPER_WORKLOADS, **SYNTH_WORKLOADS, **SMALL_WORKLOADS}
+
+# lazy per-workload size cache: (n_nodes, ring_width W) per registry
+# name, built on first request WITHOUT constructing a SimGraph (the
+# graph object itself is built once and dropped — only the two ints are
+# kept), so size-bucketing decisions over the whole registry stay cheap.
+_SIZE_CACHE: dict = {}
+
+
+def workload_sizes(name: str) -> Tuple[int, int]:
+    """(node count, release-ring width) of a registry workload, cached."""
+    if name not in _SIZE_CACHE:
+        g = WORKLOADS[name]()
+        _SIZE_CACHE[name] = (g.n, g.ring_width())
+    return _SIZE_CACHE[name]

@@ -3,12 +3,16 @@
 Trains ONE mixed population — plus the batched ZooSAC policy-gradient
 member in "egrl" mode — against several workloads at once
 (``core.egrl.ZooEGRL``), then reports per-graph best speedups and
-zero-shot transfer to held-out workloads through the batched Fig-5 path
-(``evaluate_gnn_zoo``: one padded ``GraphBatch`` call for all held-out
-graphs, not a per-graph loop).
+zero-shot transfer to held-out workloads through the bucketed Fig-5
+path (``evaluate_gnn_zoo``: one device call per size bucket for all
+held-out graphs, not a per-graph loop).
+
+Both legs run over a size-bucketed zoo (``REPRO_ZOO_BUCKETS`` /
+``--buckets``: auto | off | K) so mixed-size zoos don't pay the
+biggest graph's padding; the report records the bucket geometry.
 
     python -m repro.launch.train_zoo --train resnet50 resnet101 \
-        --holdout bert --steps 2000 --agg worst
+        --holdout bert --steps 2000 --agg worst --buckets auto
 """
 from __future__ import annotations
 
@@ -21,19 +25,23 @@ from repro.graphs.zoo import WORKLOADS
 
 
 def train_zoo(train, holdout=(), steps: int = 2000, mode: str = "egrl",
-              agg: str = None, seed: int = 0, log=print):
+              agg: str = None, seed: int = 0, buckets=None, log=print):
     algo = ZooEGRL([WORKLOADS[n]() for n in train],
                    EGRLConfig(total_steps=steps, seed=seed),
-                   mode=mode, fitness_agg=agg)
+                   mode=mode, fitness_agg=agg, buckets=buckets)
     algo.train(log=log)
     scale = algo.cfg.reward_scale
     report = {
         "train": list(train), "mode": mode, "agg": algo.agg,
         "env_steps": algo.steps, "best_fitness": float(algo.best_fitness),
+        "buckets": [
+            {"n_max": b.n_max, "w_max": b.w_max, "graphs": list(b.names)}
+            for b in algo.zoo.buckets],
+        "pad_waste_frac": round(algo.zoo.pad_waste_frac(), 4),
         # reward > 0 means a valid mapping was found: reward = scale x speedup
         "train_best_speedup": {
             name: float(max(algo.best_reward[i], 0.0)) / scale
-            for i, name in enumerate(algo.batch.names)},
+            for i, name in enumerate(algo.zoo.names)},
     }
     vec = algo.best_gnn_vec()
     if holdout and vec is not None:
@@ -52,12 +60,15 @@ def main():
     ap.add_argument("--mode", default="egrl", choices=["egrl", "ea", "pg"])
     ap.add_argument("--agg", default=None, choices=[None, "mean", "worst"],
                     help="fitness aggregation (default: REPRO_FITNESS_AGG)")
+    ap.add_argument("--buckets", default=None,
+                    help="size-bucketing policy: auto | off | K "
+                         "(default: REPRO_ZOO_BUCKETS)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default="experiments/zoo")
     args = ap.parse_args()
 
     report, _ = train_zoo(args.train, args.holdout, args.steps, args.mode,
-                          args.agg, args.seed)
+                          args.agg, args.seed, args.buckets)
     os.makedirs(args.out, exist_ok=True)
     path = os.path.join(
         args.out, f"zoo_{'-'.join(args.train)}_{args.mode}.json")

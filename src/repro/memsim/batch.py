@@ -15,15 +15,30 @@ possibly mesh-sharded leading population axis: per-mapping work is
 row-independent, so a ``("pop",)`` NamedSharding partitions the call
 shard-locally under auto-SPMD exactly like the single-graph
 ``evaluate_population`` (PR 2).
+
+Bucketed path (PR 5): the ``*_bucketed`` functions run the SAME jitted
+per-batch programs once per size bucket of a ``BucketedZoo`` — each
+bucket pays only its own ``(N_max_k, W_max_k)`` scan cost instead of the
+zoo-wide maxima — and gather per-graph scalars back to zoo order through
+the zoo's index maps.  Per-graph numbers are bit-exact against the flat
+``GraphBatch`` path AND the numpy oracle: the rectify scan's padding
+steps are IEEE identities for ANY (N_max, W_max) >= the graph's own
+sizes (a graph's ring pushes/pops touch the same credits in the same
+order regardless of ring width), eps divides by the host-precomputed
+``total_bytes``, and latency reduces left-to-right — so re-padding a
+graph to its smaller bucket changes nothing bitwise
+(tests/test_bucketed_zoo.py sweeps the whole zoo).
 """
 from __future__ import annotations
 
 from functools import partial
+from typing import Sequence
 
 import jax
 import jax.numpy as jnp
 
 from repro.graphs.batch import GraphBatch
+from repro.graphs.bucketed import BucketedZoo
 from repro.memsim.simulator import _rectify_scan, latency
 
 
@@ -70,6 +85,60 @@ def evaluate_population_zoo(gb: GraphBatch, mappings: jnp.ndarray,
     the call partitions shard-locally under auto-SPMD.
     """
     return jax.vmap(lambda m: evaluate_zoo(gb, m, reward_scale))(mappings)
+
+
+# ------------------------------------------------------- bucketed path
+def rectify_bucketed(bz: BucketedZoo, mappings: Sequence[jnp.ndarray]):
+    """Per-bucket mappings [(G_k, N_max_k, 2), ...] -> (per-bucket
+    rectified tuple, eps (G,) in ZOO order)."""
+    rects, epss = [], []
+    for gb, m in zip(bz.buckets, mappings):
+        rect, eps = rectify_zoo(gb, m)
+        rects.append(rect)
+        epss.append(eps)
+    return tuple(rects), bz.gather_zoo(epss)
+
+
+def latency_bucketed(bz: BucketedZoo,
+                     mappings: Sequence[jnp.ndarray]) -> jnp.ndarray:
+    """Masked roofline latency per graph, zoo order: [(G_k, N_max_k, 2),
+    ...] -> (G,)."""
+    return bz.gather_zoo([latency_zoo(gb, m)
+                          for gb, m in zip(bz.buckets, mappings)])
+
+
+def evaluate_bucketed(bz: BucketedZoo, mappings: Sequence[jnp.ndarray],
+                      reward_scale: float = 5.0):
+    """``evaluate_zoo`` per bucket: per-bucket (G_k, N_max_k, 2)
+    mappings -> dict of (G,) zoo-order scalars + per-bucket
+    ``rectified`` tuple."""
+    per = [evaluate_zoo(gb, m, reward_scale)
+           for gb, m in zip(bz.buckets, mappings)]
+    out = {k: bz.gather_zoo([r[k] for r in per])
+           for k in ("reward", "eps", "latency", "speedup", "valid")}
+    out["rectified"] = tuple(r["rectified"] for r in per)
+    return out
+
+
+def evaluate_population_bucketed(bz: BucketedZoo,
+                                 mappings: Sequence[jnp.ndarray],
+                                 reward_scale: float = 5.0):
+    """Zoo-wide population evaluation, one jitted call PER BUCKET.
+
+    mappings: per-bucket (P, G_k, N_max_k, 2) stacks -> dict of (P, G)
+    zoo-order arrays (+ per-bucket ``rectified``).  Each bucket call is
+    the cached ``evaluate_population_zoo`` executable for that bucket's
+    shape (K executables total, K static), and the population axis
+    keeps any ("pop",) sharding — the gather permutes only the trailing
+    graph axis.  Scalars are bit-exact vs evaluating the same rows
+    through the flat GraphBatch (see module docstring)."""
+    assert len(mappings) == bz.n_buckets, (len(mappings), bz.n_buckets)
+    per = [evaluate_population_zoo(gb, m, reward_scale)
+           for gb, m in zip(bz.buckets, mappings)]
+    out = {k: bz.gather_zoo([r[k] for r in per])
+           for k in ("reward", "eps", "latency", "speedup", "valid")}
+    out["rectified"] = tuple(r["rectified"] for r in per)
+    return out
 
 
 def aggregate_rewards(rewards: jnp.ndarray, mode: str) -> jnp.ndarray:

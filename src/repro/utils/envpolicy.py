@@ -1,0 +1,45 @@
+"""Shared fail-loud resolver for ``REPRO_*`` string policies.
+
+Every env-var dispatch in the codebase (fitness aggregation, zoo
+bucketing, population sharding) funnels through ``env_policy`` so an
+unknown value raises immediately with the valid options listed —
+matching the ``REPRO_POP_SHARDS`` fail-loud precedent — instead of
+silently falling into a string-compare default somewhere downstream.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional, Sequence, Union
+
+
+def env_policy(name: str, *, choices: Sequence[str], default: str,
+               override: Union[str, int, None] = None,
+               int_ok: bool = False, int_min: int = 1) -> Union[str, int]:
+    """Resolve the policy value of env var ``name``.
+
+    ``override`` (a function argument, e.g. ``fitness_agg=``) wins over
+    the environment; the environment wins over ``default``.  The value
+    must be one of ``choices`` (case-insensitively) or, when ``int_ok``,
+    an integer >= ``int_min`` — anything else raises ``ValueError``
+    naming the variable and every accepted value.  Integer-looking
+    strings that are also in ``choices`` (e.g. ``"1"`` for
+    REPRO_POP_SHARDS) resolve to the string form.
+    """
+    raw = override if override is not None else os.environ.get(name, default)
+    s = str(raw).strip().lower()
+    if s in choices:
+        return s
+    if int_ok:
+        try:
+            val: Optional[int] = int(s)
+        except ValueError:
+            val = None
+        if val is not None:
+            if val < int_min:
+                raise ValueError(
+                    f"{name}={raw!r}: integer values must be >= {int_min}")
+            return val
+    opts = ", ".join(repr(c) for c in choices if c)
+    if int_ok:
+        opts += f", or an integer >= {int_min}"
+    raise ValueError(f"{name}={raw!r}: valid values are {opts}")

@@ -1,0 +1,369 @@
+"""Size-bucketed zoo (PR 5): deterministic bucket assignment, zoo-order
+round-trip of the index maps, bit-exactness of the bucketed evaluators
+vs the flat GraphBatch path AND the numpy oracle, the shared env-policy
+helper's fail-loud contract, and ZooSAC single-bucket parity with the
+flat (G, B) update scan."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import gnn
+from repro.core.egrl import EGRLConfig, ZooEGRL
+from repro.core.replay import ReplayBank
+from repro.core.sac import (SACConfig, ZooSAC, _adam_init, _make_update_scan,
+                            critic_defs, critic_forward_masked)
+from repro.graphs.batch import build_graph_batch
+from repro.graphs.bucketed import (BucketedZoo, assign_buckets, bucket_keys,
+                                   build_bucketed_zoo)
+from repro.graphs.zoo import (WORKLOADS, bert, mobilenet_v2, resnet50,
+                              resnet101, tiny_gpt)
+from repro.memsim.batch import (evaluate_population_bucketed,
+                                evaluate_population_zoo, rectify_bucketed)
+from repro.memsim.reference import rectify_np
+from repro.utils.envpolicy import env_policy
+from repro.utils.params import init_params
+
+MIXED = (resnet50, bert, tiny_gpt)        # three distinct size classes
+
+
+def _zoo_graphs():
+    return [f() for f in WORKLOADS.values()]
+
+
+# --------------------------------------------------- bucket assignment
+def test_assign_buckets_deterministic_and_dense():
+    sizes = [WORKLOADS[n]().n for n in WORKLOADS]
+    a1 = assign_buckets(sizes, "auto")
+    a2 = assign_buckets(sizes, "auto")
+    assert a1 == a2                       # pure function of (sizes, policy)
+    assert min(a1) == 0 and set(a1) == set(range(max(a1) + 1))
+    # octave bands: same-bucket graphs are within 2x of each other
+    for k in range(max(a1) + 1):
+        ns = [n for n, a in zip(sizes, a1) if a == k]
+        assert max(ns) < 2 * min(ns)
+    # near-equal 1k graphs share a bucket (anchored-at-max bands)
+    by_name = dict(zip(WORKLOADS, a1))
+    assert by_name["moe_transformer"] == by_name["dense_cnn"]
+    # explicit K caps the bucket count; off/1 collapse to one bucket
+    for k in (1, 2, 3):
+        ak = assign_buckets(sizes, k)
+        assert max(ak) + 1 <= k
+        assert ak == assign_buckets(sizes, k)
+    assert assign_buckets(sizes, "off") == [0] * len(sizes)
+    # equal sizes never split
+    assert assign_buckets([64, 64, 64], "auto") == [0, 0, 0]
+
+
+def test_env_policy_fail_loud(monkeypatch):
+    """The shared resolver raises on unknown values, listing the valid
+    options — for every REPRO_* policy routed through it."""
+    monkeypatch.setenv("REPRO_ZOO_BUCKETS", "median")
+    with pytest.raises(ValueError, match="REPRO_ZOO_BUCKETS.*auto"):
+        build_bucketed_zoo([resnet50()])
+    monkeypatch.setenv("REPRO_ZOO_BUCKETS", "0")
+    with pytest.raises(ValueError, match="integer.*>= 1"):
+        build_bucketed_zoo([resnet50()])
+    monkeypatch.delenv("REPRO_ZOO_BUCKETS")
+    with pytest.raises(ValueError, match="REPRO_FITNESS_AGG.*worst"):
+        env_policy("REPRO_FITNESS_AGG", choices=("mean", "worst"),
+                   default="mean", override="median")
+    from repro.distributed.population import resolve_pop_sharding
+    with pytest.raises(ValueError, match="REPRO_POP_SHARDS"):
+        resolve_pop_sharding(4, 2, "garbage")
+
+
+def test_bucketed_zoo_index_maps_round_trip():
+    """graph_bucket/graph_slot must be a bijection zoo order <->
+    (bucket, slot), gather_zoo must invert the bucket-major concat, and
+    split_zoo_mappings must land every graph's rows in its slot."""
+    graphs = [f() for f in MIXED] + [resnet101(), mobilenet_v2()]
+    zoo = build_bucketed_zoo(graphs)
+    assert zoo.n_buckets >= 2
+    assert zoo.names == tuple(g.name for g in graphs)
+    seen = set()
+    for gi, (b, s) in enumerate(zip(zoo.graph_bucket, zoo.graph_slot)):
+        assert (b, s) not in seen
+        seen.add((b, s))
+        assert zoo.buckets[b].names[s] == graphs[gi].name
+        assert int(zoo.buckets[b].n_nodes[s]) == graphs[gi].n
+    assert zoo.real_sizes() == tuple(g.n for g in graphs)
+    # gather returns bucket-major data to zoo order
+    per_bucket = [jnp.arange(b.n_graphs) + 10 * k
+                  for k, b in enumerate(zoo.buckets)]
+    gathered = np.asarray(zoo.gather_zoo(per_bucket))
+    for gi in range(zoo.n_graphs):
+        assert gathered[gi] == 10 * zoo.graph_bucket[gi] + zoo.graph_slot[gi]
+    # split: zoo-order mappings -> per-bucket slices at bucket width
+    n_max = max(g.n for g in graphs)
+    maps = jnp.arange(2 * len(graphs) * n_max * 2).reshape(
+        2, len(graphs), n_max, 2)
+    split = zoo.split_zoo_mappings(maps)
+    for gi in range(zoo.n_graphs):
+        b, s = zoo.graph_bucket[gi], zoo.graph_slot[gi]
+        np.testing.assert_array_equal(
+            np.asarray(split[b][:, s]),
+            np.asarray(maps[:, gi, :zoo.buckets[b].n_max]))
+
+
+def test_single_bucket_wraps_flat_batch_arrays():
+    """"off" (and from_batch) must expose the EXACT flat GraphBatch —
+    the arrays single-bucket bit-identity rests on."""
+    graphs = [f() for f in MIXED]
+    gb = build_graph_batch(graphs)
+    zoo = build_bucketed_zoo(graphs, buckets="off")
+    assert zoo.n_buckets == 1 and zoo.pad_waste_frac() == \
+        BucketedZoo.from_batch(gb).pad_waste_frac()
+    b = zoo.buckets[0]
+    assert b.n_max == gb.n_max and b.w_max == gb.w_max
+    for a, c in zip(jax.tree.leaves(b), jax.tree.leaves(gb)):
+        assert (np.asarray(a) == np.asarray(c)).all()
+    # K == 1 consumes PRNG keys unchanged (flat-path bit-identity)
+    k = jax.random.PRNGKey(3)
+    (same,) = bucket_keys(k, 1)
+    assert (np.asarray(same) == np.asarray(k)).all()
+    assert len(bucket_keys(k, 3)) == 3
+
+
+def test_bucketed_waste_never_exceeds_flat():
+    graphs = _zoo_graphs()
+    flat = BucketedZoo.from_batch(build_graph_batch(graphs))
+    auto = build_bucketed_zoo(graphs, buckets="auto")
+    assert auto.pad_waste_frac() <= flat.pad_waste_frac()
+    assert auto.pad_waste_frac() < 0.1 < flat.pad_waste_frac()
+    # every bucket's ring is no wider than the flat zoo-wide ring
+    assert max(b.w_max for b in auto.buckets) <= flat.buckets[0].w_max
+
+
+# ------------------------------------------------ evaluator bit-exactness
+def test_bucketed_evaluation_bit_exact_vs_flat_and_oracle():
+    """The acceptance criterion: bucketed evaluate_population on the
+    FULL zoo is bit-exact vs the flat GraphBatch path on the same
+    mappings, and eps/rectified match the numpy oracle run on the
+    bucket's own padded arrays."""
+    graphs = _zoo_graphs()
+    gb = build_graph_batch(graphs)
+    zoo = build_bucketed_zoo(graphs)
+    assert zoo.n_buckets >= 2
+    rng = np.random.default_rng(0)
+    maps = rng.integers(0, 3, (5, gb.n_graphs, gb.n_max, 2)).astype(np.int32)
+    maps[3] = 1                                # all-VMEM: forces spills
+    maps[4] = 0                                # all-HBM: never spills
+    flat = evaluate_population_zoo(gb, jnp.asarray(maps))
+    bmaps = zoo.split_zoo_mappings(jnp.asarray(maps))
+    buck = evaluate_population_bucketed(zoo, bmaps)
+    for k in ("reward", "eps", "latency", "speedup", "valid"):
+        assert (np.asarray(flat[k]) == np.asarray(buck[k])).all(), k
+    # rectified real rows agree between the two paddings, and with the
+    # oracle evaluated on the bucket's own (smaller) padded arrays
+    for gi, g in enumerate(graphs):
+        b, s = zoo.graph_bucket[gi], zoo.graph_slot[gi]
+        for p in range(maps.shape[0]):
+            br = np.asarray(buck["rectified"][b][p, s, :g.n])
+            fr = np.asarray(flat["rectified"][p, gi, :g.n])
+            assert (br == fr).all(), (g.name, p)
+            rect_n, eps_n = rectify_np(
+                zoo.buckets[b].graph_sim(s), np.asarray(bmaps[b][p, s]))
+            assert np.float32(buck["eps"][p, gi]) == eps_n, (g.name, p)
+            assert (br == rect_n[:g.n]).all(), (g.name, p)
+    # the sweep exercised both spilled and clean mappings
+    eps = np.asarray(buck["eps"])
+    assert (eps > 0).any() and (eps <= 0).any()
+
+
+def test_rectify_bucketed_gathers_zoo_order():
+    graphs = [f() for f in MIXED]
+    zoo = build_bucketed_zoo(graphs)
+    rng = np.random.default_rng(1)
+    bmaps = [jnp.asarray(rng.integers(0, 3, (b.n_graphs, b.n_max, 2)),
+                         jnp.int32) for b in zoo.buckets]
+    rects, eps = rectify_bucketed(zoo, bmaps)
+    assert eps.shape == (len(graphs),)
+    for k, b in enumerate(zoo.buckets):
+        assert rects[k].shape == (b.n_graphs, b.n_max, 2)
+        # padding rows masked to HBM, as in the flat path
+        for s in range(b.n_graphs):
+            n = int(b.n_nodes[s])
+            assert (np.asarray(rects[k][s, n:]) == 0).all()
+
+
+# ----------------------------------------------- GNN + driver integration
+def test_gnn_bucketed_forward_matches_flat_real_rows():
+    """Per-bucket zoo forwards agree with the flat padded forward on
+    real rows to float tolerance (smaller padding regroups the
+    attention reductions, so bitwise is not expected)."""
+    graphs = [resnet50(), resnet101(), tiny_gpt()]
+    gb = build_graph_batch(graphs)
+    zoo = build_bucketed_zoo(graphs)
+    p = gnn.init_gnn(jax.random.PRNGKey(0), gb.n_features)
+    flat = gnn.gnn_forward_zoo(p, gb.feats, gb.adj, gb.node_mask,
+                               gb.n_nodes)
+    bucketed = gnn.gnn_forward_bucketed(p, zoo.buckets)
+    for gi, g in enumerate(graphs):
+        b, s = zoo.graph_bucket[gi], zoo.graph_slot[gi]
+        np.testing.assert_allclose(np.asarray(bucketed[b][s, :g.n]),
+                                   np.asarray(flat[gi, :g.n]),
+                                   rtol=1e-4, atol=1e-5)
+        assert (np.asarray(bucketed[b][s, g.n:]) == 0.0).all()
+
+
+def test_population_logits_bucketed_shapes():
+    graphs = [resnet50(), tiny_gpt()]
+    zoo = build_bucketed_zoo(graphs)
+    template = gnn.init_gnn(jax.random.PRNGKey(0), zoo.n_features)
+    pop = jnp.stack([gnn.flatten_params(
+        gnn.init_gnn(jax.random.PRNGKey(i), zoo.n_features))
+        for i in range(3)])
+    out = gnn.population_logits_bucketed(template, zoo.buckets, pop)
+    assert len(out) == zoo.n_buckets
+    for lg, b in zip(out, zoo.buckets):
+        assert lg.shape == (3, b.n_graphs, b.n_max, 2, 3)
+
+
+def test_zoo_egrl_multi_bucket_generation_tracks_all_graphs():
+    """A mixed-size zoo trains across buckets: per-graph bests track in
+    zoo order, mappings come back at each graph's REAL length, and the
+    Boltzmann genome grid is the bucket-major sum (not G * flat
+    N_max)."""
+    graphs = [f() for f in MIXED]
+    cfg = EGRLConfig(pop_size=6, boltzmann_frac=0.34, elites=2, seed=0)
+    algo = ZooEGRL(graphs, cfg, mode="ea")
+    assert algo.zoo.n_buckets >= 2
+    assert algo.n_eff == sum(b.n_graphs * b.n_max for b in algo.zoo.buckets)
+    assert algo.n_eff < len(graphs) * max(g.n for g in graphs)
+    recs = [algo.generation() for _ in range(2)]
+    assert algo.steps == 2 * cfg.pop_size * len(graphs)
+    for gi, g in enumerate(graphs):
+        assert algo.best_mapping[gi] is not None
+        assert algo.best_mapping[gi].shape == (g.n, 2)
+    assert set(recs[-1]["best_reward_per_graph"]) == \
+        {g.name for g in graphs}
+    bests = [r["best_fitness"] for r in recs]
+    assert bests == sorted(bests)
+
+
+def test_zoo_egrl_bucketing_policies_agree_on_rewards():
+    """The SAME mappings score identically under any bucketing: rescore
+    one policy's generation-0 rollouts through off/auto/K zoos."""
+    graphs = [f() for f in MIXED]
+    n_max = max(g.n for g in graphs)
+    rng = np.random.default_rng(7)
+    maps = jnp.asarray(rng.integers(0, 3, (4, len(graphs), n_max, 2)),
+                       jnp.int32)
+    results = []
+    for policy in ("off", "auto", 2):
+        zoo = build_bucketed_zoo(graphs, buckets=policy)
+        res = evaluate_population_bucketed(zoo, zoo.split_zoo_mappings(maps))
+        results.append(np.asarray(res["reward"]))
+    for r in results[1:]:
+        assert (r == results[0]).all()
+
+
+def test_zoo_egrl_full_mode_multi_bucket_sac():
+    """"egrl" mode across buckets: the per-zoo-index bank fills at each
+    graph's bucket width, the ZooSAC update runs on per-bucket batches,
+    and losses surface in the generation record."""
+    graphs = [resnet50(), tiny_gpt()]
+    cfg = EGRLConfig(pop_size=6, boltzmann_frac=0.34, elites=1, seed=0,
+                     sac=SACConfig(batch=8))
+    algo = ZooEGRL(graphs, cfg, mode="egrl")
+    assert algo.zoo.n_buckets == 2
+    assert algo.bank.node_slots == algo.zoo.node_slots
+    algo.generation()
+    assert len(algo.bank) == 7            # pop 6 + 1 PG row per graph
+    r2 = algo.generation()
+    assert {"critic_loss", "actor_loss", "entropy"} <= set(r2)
+    assert algo.best_gnn_vec() is not None
+
+
+def test_zoo_sac_single_bucket_matches_flat_scan():
+    """ZooSAC on a single-bucket two-graph zoo must match the flat
+    (G, B) update scan of PR 4 — the scan rebuilt here with the flat
+    array losses — on losses and updated parameters."""
+    graphs = [resnet50(), resnet101()]
+    gb = build_graph_batch(graphs)
+    key = jax.random.PRNGKey(11)
+    cfg = SACConfig(batch=6)
+    zoo_learner = ZooSAC(build_bucketed_zoo(graphs, buckets="off"), key, cfg)
+
+    # flat reference: PR 4's ZooSAC forms, arrays not tuples
+    k1, k2 = jax.random.split(key)
+    actor = gnn.init_gnn(k1, gb.n_features)
+    critic = init_params(critic_defs(gb.n_features), k2)
+    feats, adj, live, nreal = gb.feats, gb.adj, gb.node_mask, gb.n_nodes
+
+    def critic_loss(cp, acts_oh, rewards):
+        def one_graph(f, a, m, oh_b, r_b):
+            q1, q2 = jax.vmap(
+                lambda oh: critic_forward_masked(cp, f, a, m, oh))(oh_b)
+            return jnp.mean((q1 - r_b) ** 2 + (q2 - r_b) ** 2)
+        return jnp.mean(jax.vmap(one_graph)(feats, adj, live,
+                                            acts_oh, rewards))
+
+    def actor_loss(ap, cp):
+        logits = gnn.gnn_forward_zoo(ap, feats, adj, live, nreal,
+                                     backend="jnp")
+        probs = jax.nn.softmax(logits, axis=-1)
+
+        def one_graph(f, a, m, lg, pr):
+            q1, q2 = critic_forward_masked(cp, f, a, m, pr)
+            return jnp.minimum(q1, q2), gnn.entropy_masked(lg, m)
+
+        qmin, ent = jax.vmap(one_graph)(feats, adj, live, logits, probs)
+        ent = jnp.mean(ent)
+        return -(jnp.mean(qmin) + cfg.alpha * ent), ent
+
+    scan = _make_update_scan(cfg, critic_loss, actor_loss)
+
+    rng = np.random.default_rng(2)
+    bank = ReplayBank([gb.n_max] * 2, seed=0)
+    acts = rng.integers(0, 3, (30, 2, gb.n_max, 2))
+    rews = rng.standard_normal((30, 2)).astype(np.float32)
+    bank.add_batch(acts, rews)
+    info = zoo_learner.update(bank, steps=2)
+    assert info
+
+    # replay + noise streams replicated for the reference
+    ref_bank = ReplayBank([gb.n_max] * 2, seed=0)
+    ref_bank.add_batch(acts, rews)
+    a_s, r_s = ref_bank.sample_stack(cfg.batch, 2)
+    k_noise = jax.random.split(jax.random.PRNGKey(17))[1]
+    noise = jnp.clip(cfg.action_noise * jax.random.normal(
+        k_noise, a_s.shape + (3,)), -cfg.noise_clip, cfg.noise_clip)
+    (actor, critic, _, _, cl, al, en) = scan(
+        actor, critic, _adam_init(actor), _adam_init(critic),
+        jnp.asarray(a_s), jnp.asarray(r_s), noise)
+    np.testing.assert_allclose(info["critic_loss"], float(cl),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(info["actor_loss"], float(al),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(info["entropy"], float(en),
+                               rtol=1e-5, atol=1e-6)
+    for a, b in zip(jax.tree.leaves(actor),
+                    jax.tree.leaves(zoo_learner.actor)):
+        np.testing.assert_allclose(np.asarray(b), np.asarray(a),
+                                   rtol=1e-4, atol=2e-5)
+    for a, b in zip(jax.tree.leaves(critic),
+                    jax.tree.leaves(zoo_learner.critic)):
+        np.testing.assert_allclose(np.asarray(b), np.asarray(a),
+                                   rtol=1e-4, atol=2e-5)
+
+
+def test_evaluate_gnn_zoo_bucketed_matches_flat_batch():
+    """The Fig-5 sweep through a bucketed zoo reports the same speedups
+    as through the flat GraphBatch wrapped as one bucket (the K=1
+    stream) for K=1, and stays >= the greedy floor for K>1."""
+    from repro.core.egrl import evaluate_gnn_zoo
+
+    graphs = [resnet50(), resnet101()]     # one octave: single bucket
+    vec = gnn.flatten_params(gnn.init_gnn(jax.random.PRNGKey(0), 19))
+    flat = evaluate_gnn_zoo(graphs, vec, samples=2, seed=0,
+                            batch=build_graph_batch(graphs))
+    auto = evaluate_gnn_zoo(graphs, vec, samples=2, seed=0)
+    assert flat == auto                    # single-bucket: same draws
+    mixed = [resnet50(), bert()]           # two buckets
+    out = evaluate_gnn_zoo(mixed, vec, samples=2, seed=0)
+    greedy = evaluate_gnn_zoo(mixed, vec, samples=0, seed=0)
+    assert set(out) == {"resnet50", "bert"}
+    for name in out:
+        assert out[name] >= greedy[name] - 1e-6 >= -1e-6

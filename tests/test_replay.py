@@ -2,6 +2,7 @@
 determinism, and the per-graph bank's stacking/draw-order contracts
 (the G=1 contract backs the ZooSAC parity test in test_zoo_egrl.py)."""
 import numpy as np
+import pytest
 
 from repro.core.replay import ReplayBank, ReplayBuffer
 
@@ -63,7 +64,7 @@ def test_sample_is_deterministic_under_seed():
 
 def test_bank_routes_rows_per_graph_and_stacks_samples():
     n_graphs, n_max = 3, 4
-    bank = ReplayBank(n_graphs, n_max, capacity=16, seed=0)
+    bank = ReplayBank([n_max] * n_graphs, capacity=16, seed=0)
     rng = np.random.default_rng(1)
     acts = rng.integers(0, 3, (6, n_graphs, n_max, 2))
     rews = rng.standard_normal((6, n_graphs)).astype(np.float32)
@@ -90,10 +91,47 @@ def test_bank_single_graph_matches_buffer_draw_order():
     acts, rews = _rows(10)
     buf = ReplayBuffer(n_nodes=3, capacity=32, seed=5)
     buf.add_batch(acts, rews)
-    bank = ReplayBank(1, 3, capacity=32, seed=5)
+    bank = ReplayBank([3], capacity=32, seed=5)
     bank.add_batch(acts[:, None], rews[:, None])
     want = [buf.sample(4) for _ in range(3)]
     got_a, got_r = bank.sample_stack(batch=4, steps=3)
     for u in range(3):
         np.testing.assert_array_equal(got_a[u, 0], want[u][0])
         np.testing.assert_array_equal(got_r[u, 0], want[u][1])
+
+
+def test_bank_per_bucket_sampling_matches_flat_draws():
+    """Buffers are keyed by ZOO index with independent seeded rngs, so
+    sampling per bucket draws exactly what the flat whole-zoo sweep
+    draws for the same buffers — bucket iteration order cannot change
+    any graph's stream."""
+    widths = [4, 7, 4]                      # graphs 0 and 2 share a bucket
+    acts = [np.arange(12 * w * 2).reshape(12, w, 2) % 3 for w in widths]
+    rews = [np.arange(12, dtype=np.float32) + 100 * i
+            for i in range(len(widths))]
+
+    def fresh():
+        bank = ReplayBank(widths, capacity=32, seed=9)
+        for i in range(len(widths)):
+            bank.add_graph(i, acts[i], rews[i])
+        return bank
+
+    flat = fresh()
+    want = {i: [flat.buffers[i].sample(5) for _ in range(2)]
+            for i in range(3)}
+    bank = fresh()
+    # bucket order deliberately scrambled vs zoo order
+    a1, r1 = bank.sample_bucket([1], batch=5, steps=2)
+    a0, r0 = bank.sample_bucket([0, 2], batch=5, steps=2)
+    assert a1.shape == (2, 1, 5, 7, 2) and a0.shape == (2, 2, 5, 4, 2)
+    for u in range(2):
+        np.testing.assert_array_equal(a1[u, 0], want[1][u][0])
+        np.testing.assert_array_equal(a0[u, 0], want[0][u][0])
+        np.testing.assert_array_equal(a0[u, 1], want[2][u][0])
+        np.testing.assert_array_equal(r0[u, 1], want[2][u][1])
+
+
+def test_bank_rejects_mixed_width_buckets():
+    bank = ReplayBank([4, 7], capacity=8, seed=0)
+    with pytest.raises(AssertionError, match="mixed widths"):
+        bank.sample_bucket([0, 1], batch=2, steps=1)

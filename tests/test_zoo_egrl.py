@@ -11,18 +11,36 @@ from repro.core.egrl import (EGRLConfig, ZooEGRL, evaluate_gnn_on,
 from repro.core.replay import ReplayBank, ReplayBuffer
 from repro.core.sac import SACConfig, SACLearner, ZooSAC
 from repro.graphs.batch import build_graph_batch
-from repro.graphs.zoo import (PAPER_WORKLOADS, SYNTH_WORKLOADS, WORKLOADS,
-                              dense_cnn, moe_transformer, resnet50,
-                              resnet101)
+from repro.graphs.zoo import (PAPER_WORKLOADS, SMALL_WORKLOADS,
+                              SYNTH_WORKLOADS, WORKLOADS, dense_cnn,
+                              moe_transformer, resnet50, resnet101,
+                              workload_sizes)
 
 
 # ------------------------------------------------------- zoo registry
 def test_zoo_registry_contains_1k_graphs():
-    assert set(PAPER_WORKLOADS) | set(SYNTH_WORKLOADS) == set(WORKLOADS)
+    assert (set(PAPER_WORKLOADS) | set(SYNTH_WORKLOADS)
+            | set(SMALL_WORKLOADS) == set(WORKLOADS))
     big = {name: f().n for name, f in SYNTH_WORKLOADS.items()}
     assert len(big) >= 2
     for name, n in big.items():
         assert n >= 1000, f"{name} has only {n} nodes"
+
+
+def test_zoo_registry_small_size_classes():
+    """The <200-node workloads that give the BucketedZoo real small
+    size classes, and the lazy size cache that makes bucket assignment
+    cheap (no SimGraph build)."""
+    small = {name: f() for name, f in SMALL_WORKLOADS.items()}
+    assert len(small) >= 2
+    for name, g in small.items():
+        assert g.n < 200, f"{name} has {g.n} nodes"
+        g.validate()
+        # the lazy registry sizes match the built graph exactly
+        assert workload_sizes(name) == (g.n, g.ring_width())
+    # cache is stable across calls
+    for name in WORKLOADS:
+        assert workload_sizes(name) == workload_sizes(name)
 
 
 def test_synth_graphs_validate_and_stress_the_ring():
@@ -142,7 +160,10 @@ def test_zoo_egrl_with_1k_graphs():
     cfg = EGRLConfig(pop_size=6, boltzmann_frac=0.34, elites=2, seed=0)
     algo = ZooEGRL([resnet50(), moe_transformer(), dense_cnn()], cfg)
     rec = algo.generation()
-    assert algo.batch.n_max >= 1000
+    # the mixed-size zoo buckets: resnet50 peels off the 1k graphs
+    assert algo.zoo.n_buckets >= 2
+    assert max(b.n_max for b in algo.zoo.buckets) >= 1000
+    assert min(b.n_max for b in algo.zoo.buckets) < 200
     assert len(rec["best_reward_per_graph"]) == 3
 
 
@@ -170,7 +191,7 @@ def test_zoo_sac_single_graph_matches_sac_learner():
     rews = rng.standard_normal(40).astype(np.float32)
     buf = ReplayBuffer(g.n, seed=0)
     buf.add_batch(acts, rews)
-    bank = ReplayBank(1, gb.n_max, seed=0)
+    bank = ReplayBank([gb.n_max], seed=0)
     bank.add_batch(acts[:, None], rews[:, None])
 
     info_ref = ref.update(buf, steps=3)
@@ -258,7 +279,7 @@ def test_zoo_egrl_ea_mode_has_no_pg_state():
     algo = ZooEGRL([resnet50()], cfg, mode="ea")
     assert algo.learner is None and algo.bank is None
     _, k0 = jax.random.split(jax.random.PRNGKey(cfg.seed))
-    want = gnn.init_gnn(k0, algo.batch.n_features)
+    want = gnn.init_gnn(k0, algo.zoo.n_features)
     for a, b in zip(jax.tree.leaves(want), jax.tree.leaves(algo._template)):
         assert (a == b).all()
 

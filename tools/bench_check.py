@@ -65,7 +65,10 @@ def check(data: dict) -> list:
             for key in PER_GRAPH_US:
                 _require(errors, f"rectify.{name}", row, key)
 
-    # ---- zoo_eval: batch geometry + both us/rollout numbers
+    # ---- zoo_eval: batch geometry + flat/bucketed/loop us-per-rollout
+    # numbers + the pad_waste_frac gauge (geometry, not timing: the
+    # bucketed <= flat relation is deterministic, so checking it here
+    # cannot flake on a slow runner)
     zoo = data.get("zoo_eval")
     if not isinstance(zoo, dict):
         _fail(errors, "missing section 'zoo_eval'")
@@ -74,10 +77,44 @@ def check(data: dict) -> list:
         _require(errors, "zoo_eval", zoo, "n_max")
         _require(errors, "zoo_eval", zoo, "rollouts_per_call")
         _require(errors, "zoo_eval", zoo, "batched_us_per_rollout")
+        _require(errors, "zoo_eval", zoo, "bucketed_us_per_rollout")
         _require(errors, "zoo_eval", zoo, "pergraph_loop_us_per_rollout")
         graphs = _require(errors, "zoo_eval", zoo, "graphs", kind=dict)
         if isinstance(graphs, dict) and not graphs:
             _fail(errors, "zoo_eval.graphs: empty")
+        waste = _require(errors, "zoo_eval", zoo, "pad_waste_frac",
+                         kind=dict)
+        if isinstance(waste, dict):
+            vals = {}
+            for key in ("flat", "bucketed"):
+                v = waste.get(key)
+                if not (isinstance(v, (int, float))
+                        and not isinstance(v, bool)
+                        and math.isfinite(v) and 0.0 <= v < 1.0):
+                    _fail(errors, f"zoo_eval.pad_waste_frac.{key}: expected "
+                                  f"a fraction in [0, 1), got {v!r}")
+                else:
+                    vals[key] = v
+            if len(vals) == 2 and vals["bucketed"] > vals["flat"]:
+                _fail(errors, "zoo_eval.pad_waste_frac: bucketed "
+                              f"({vals['bucketed']}) exceeds flat "
+                              f"({vals['flat']}) — bucketing must never "
+                              f"ADD padding")
+        buckets = _require(errors, "zoo_eval", zoo, "buckets", kind=dict)
+        if isinstance(buckets, dict):
+            if not buckets:
+                _fail(errors, "zoo_eval.buckets: empty")
+            for name, row in buckets.items():
+                if not isinstance(row, dict):
+                    _fail(errors, f"zoo_eval.buckets.{name}: expected a "
+                                  f"dict, got {type(row)}")
+                    continue
+                _require(errors, f"zoo_eval.buckets.{name}", row, "n_max")
+                _require(errors, f"zoo_eval.buckets.{name}", row, "w_max")
+                gs = _require(errors, f"zoo_eval.buckets.{name}", row,
+                              "graphs", kind=list)
+                if isinstance(gs, list) and not gs:
+                    _fail(errors, f"zoo_eval.buckets.{name}.graphs: empty")
 
     # ---- generation: per-graph ea/egrl ms + the merged zoo SAC bench
     gen = data.get("generation")
