@@ -1,5 +1,5 @@
 # Convenience targets; see ROADMAP.md for the tier-1 verify command.
-.PHONY: test smoke bench bench-zoo bench-check docs-check
+.PHONY: test smoke bench bench-zoo bench-gat bench-check docs-check
 
 test:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python -m pytest -x -q
@@ -15,6 +15,12 @@ bench:
 # 1k+-node graphs) vs the per-graph loop
 bench-zoo:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python benchmarks/run.py zoo_eval
+
+# per-shape GAT backend autotune audit: fwd and fwd+bwd timings of every
+# candidate (chunked at each block size, pallas on TPU, dense jnp for
+# reference) and the backend `auto` resolves to, per zoo graph size
+bench-gat:
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python benchmarks/run.py gat
 
 # schema gate on the tracked benchmarks/BENCH_inner_loop.json: every
 # inner-loop section present with well-formed fields (never a timing

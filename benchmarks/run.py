@@ -278,6 +278,40 @@ def bench_zoo_sac() -> None:
     }, merge=True)
 
 
+def bench_gat() -> None:
+    """GAT backend gate: per-shape fwd and fwd+bwd timings of every
+    non-materializing backend candidate (the autotune set of
+    core/gat_tune.py) plus the dense jnp oracle, at the GNN's training
+    width (hidden 128, 4 heads) over the distinct zoo graph sizes.
+    Writes the ``gat`` section of BENCH_inner_loop.json: which backend
+    ``auto`` resolves to per shape and the timings that justified it —
+    an audit record, never a pass/fail timing gate."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core import gat_tune, gnn
+    from repro.graphs.zoo import WORKLOADS
+
+    sizes = sorted({f().n for f in WORKLOADS.values()})
+    if STEPS < 200:        # smoke budget: timing dense jnp fwd+bwd on the
+        dropped = [n for n in sizes if n >= 500]    # 1k-node graphs costs
+        sizes = [n for n in sizes if n < 500]       # minutes on 2 CPU cores
+        print(f"gat_sizes_skipped,{len(dropped)},reduced_budget_"
+              f"{'_'.join(f'n{n}' for n in dropped)}")
+    payload = {"hidden": gnn.HIDDEN, "heads": gnn.HEADS,
+               "platform": jax.default_backend(), "shapes": {}}
+    for n in sizes:
+        res = gat_tune.autotune(n, gnn.HIDDEN, gnn.HEADS, jnp.float32,
+                                include_dense=True, force_time=True)
+        chosen = gat_tune._label(res.backend, res.chunk)
+        for label, row in sorted(res.timings.items()):
+            print(f"gat_{label}_n{n},{row['fwd_bwd_us']:.1f},"
+                  f"us_fwd_bwd_fwd{row['fwd_us']:.1f}")
+        print(f"gat_chosen_n{n},{chosen},autotuned_backend")
+        payload["shapes"][f"n{n}"] = {"chosen": chosen,
+                                      "candidates": res.timings}
+    _update_json("gat", payload)
+
+
 def _pop_sharding_child() -> None:
     """Child body for bench_pop_sharding: time EA-mode generations with
     the population sharded over every visible device, print one
@@ -379,6 +413,7 @@ BENCHES = {
     "zoo_eval": bench_zoo_eval,
     "generation": bench_generation,
     "zoo_sac": bench_zoo_sac,
+    "gat": bench_gat,
     "pop_sharding": bench_pop_sharding,
     "fig4": bench_fig4,
     "fig5": bench_fig5,
@@ -390,7 +425,7 @@ BENCHES = {
 # generation and zoo_sac both merge into the shared "generation"
 # section, so either can be refreshed standalone.
 GROUPS = {"inner_loop": ("rectify", "zoo_eval", "generation", "zoo_sac",
-                         "pop_sharding")}
+                         "gat", "pop_sharding")}
 
 
 def main(argv=None) -> None:

@@ -1,0 +1,177 @@
+"""Measurement-driven GAT backend selection (``REPRO_GAT_BACKEND=auto``).
+
+``autotune(n, d, heads, dtype)`` times every candidate lowering of the
+fused GAT op — forward alone and forward+backward (``jax.grad``) — on
+random inputs of exactly the requested shape, caches the winner per
+process, and returns it.  Candidates are the lowerings that keep the
+attention transient linear in N:
+
+- ``chunked`` at several neighbor-block sizes (the effective chunk is
+  clamped to the padded row count, and duplicate effective chunks are
+  deduped — a 57-node graph has ONE candidate and skips timing);
+- ``pallas`` (the fused kernel pair) when running compiled, i.e. on TPU
+  — interpret mode is parity-only and never a candidate.
+
+The dense ``jnp`` path is deliberately NOT selectable by ``auto``: it
+materializes the ``(N, N, H)`` score tensor, and bounding that transient
+is the point of the dispatch (training a 1k-node graph would otherwise
+pay O(N^2 H) memory per GAT layer per batch element).  ``bench_gat``
+(``benchmarks/run.py``) still times it alongside the candidates —
+``include_dense=True`` — and records everything in the ``gat`` section
+of ``BENCH_inner_loop.json`` so the choice stays auditable.
+
+The winner is scored by the fwd+bwd time (training dominates the end
+metric ``zoo_sac_ms``; inference-only deltas between the surviving
+candidates are small).  Resolution happens at trace time — shapes are
+static — so the one-off timing runs on concrete arrays and every later
+trace of the same (n, d, heads, dtype) is a dict hit.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+DEFAULT_CHUNK = 128
+CHUNK_CANDIDATES = (64, 128, 256)
+
+_CACHE: Dict[tuple, "GATTune"] = {}
+
+
+@dataclasses.dataclass(frozen=True)
+class GATTune:
+    """One cached autotune decision: the winning backend (+chunk for
+    ``chunked``) and the per-candidate timings that justified it
+    (empty when a single deduped candidate made timing pointless)."""
+    backend: str
+    chunk: Optional[int]
+    timings: Dict[str, Dict[str, float]]
+
+
+def _ceil_to(n: int, m: int) -> int:
+    return -(-n // m) * m
+
+
+def clamp_chunk(n: int, chunk: int) -> int:
+    """Largest useful chunk for an n-row graph: no point padding the
+    neighbor axis past the next lane multiple of n."""
+    return min(chunk, _ceil_to(n, 8))
+
+
+def _cache_key(n, d, heads, dtype) -> tuple:
+    return (int(n), int(d), int(heads), np.dtype(dtype).name,
+            jax.default_backend())
+
+
+def _candidates(n: int):
+    cands = []
+    if jax.default_backend() == "tpu":
+        cands.append(("pallas", None))
+    seen = set()
+    for c in CHUNK_CANDIDATES:
+        eff = clamp_chunk(n, c)
+        if eff >= n and n > min(CHUNK_CANDIDATES):
+            # a full-width block would re-materialize the (N, N, H)
+            # score tensor the dispatch exists to bound; only graphs
+            # smaller than the narrowest chunk get a single full block
+            continue
+        if eff not in seen:
+            seen.add(eff)
+            cands.append(("chunked", eff))
+    return cands
+
+
+def _label(backend: str, chunk) -> str:
+    return backend if chunk is None else f"{backend}{chunk}"
+
+
+def _make_fn(backend: str, chunk, heads: int):
+    from repro.kernels.gat_mp import ops
+    from repro.kernels.gat_mp.ref import gat_mp_ref
+
+    if backend == "pallas":
+        return functools.partial(ops.gat_mp, heads=heads,
+                                 interpret=jax.default_backend() != "tpu")
+    if backend == "chunked":
+        return functools.partial(ops.gat_mp_chunked, heads=heads,
+                                 chunk=chunk)
+    return jax.jit(functools.partial(gat_mp_ref, heads=heads))
+
+
+def _bench_inputs(n: int, d: int, heads: int, dtype):
+    rng = np.random.default_rng(0)
+    z = jnp.asarray(rng.standard_normal((n, d)), dtype)
+    es = jnp.asarray(rng.standard_normal((n, heads)), dtype)
+    ed = jnp.asarray(rng.standard_normal((n, heads)), dtype)
+    adj = rng.random((n, n)) < min(1.0, 8.0 / n)     # ~8 neighbors/row
+    adj = np.maximum(np.maximum(adj, adj.T), np.eye(n))
+    return z, es, ed, jnp.asarray(adj, dtype)
+
+
+def _time(fn, args, reps: int = 3) -> float:
+    jax.block_until_ready(fn(*args))                 # compile + warm
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+def autotune(n: int, d: int, heads: int, dtype, *,
+             include_dense: bool = False,
+             force_time: bool = False) -> GATTune:
+    """Resolve (and cache) the fastest non-materializing backend for one
+    (n, d, heads, dtype) shape.  ``force_time`` times even a lone
+    candidate (and re-times a cache hit that skipped timing);
+    ``include_dense`` additionally times the dense jnp path for the
+    benchmark record — it is never eligible to win."""
+    key = _cache_key(n, d, heads, dtype)
+    hit = _CACHE.get(key)
+    if hit is not None and not (force_time and not hit.timings) \
+            and not (include_dense and "jnp" not in hit.timings):
+        return hit
+
+    cands = _candidates(n)
+    if len(cands) == 1 and not force_time and not include_dense:
+        res = GATTune(cands[0][0], cands[0][1], {})
+        _CACHE[key] = res
+        return res
+
+    args = _bench_inputs(n, d, heads, dtype)
+    timed = list(cands) + ([("jnp", None)] if include_dense else [])
+    timings: Dict[str, Dict[str, float]] = {}
+    best: Optional[Tuple[str, Optional[int]]] = None
+    best_t = float("inf")
+    for backend, chunk in timed:
+        fn = _make_fn(backend, chunk, heads)
+        t_f = _time(jax.jit(lambda z, es, ed, a, fn=fn: fn(z, es, ed, a)),
+                    args)
+        t_fb = _time(jax.jit(jax.grad(
+            lambda z, es, ed, a, fn=fn: fn(z, es, ed, a).sum(),
+            argnums=(0, 1, 2))), args)
+        timings[_label(backend, chunk)] = {"fwd_us": round(t_f, 1),
+                                           "fwd_bwd_us": round(t_fb, 1)}
+        if backend != "jnp" and t_fb < best_t:
+            best, best_t = (backend, chunk), t_fb
+    assert best is not None
+    res = GATTune(best[0], best[1], timings)
+    _CACHE[key] = res
+    return res
+
+
+def chunk_for(n: int, d: int, heads: int, dtype) -> int:
+    """Chunk size for an explicit/resolved ``chunked`` backend: the
+    autotuned winner's chunk when one is cached for this shape, else the
+    clamped default (an explicit ``REPRO_GAT_BACKEND=chunked`` never
+    triggers timing)."""
+    hit = _CACHE.get(_cache_key(n, d, heads, dtype))
+    if hit is not None and hit.backend == "chunked" and hit.chunk:
+        return hit.chunk
+    return clamp_chunk(n, DEFAULT_CHUNK)

@@ -10,29 +10,38 @@ policy. All functions are shape-static per workload, so population forward
 passes vmap over stacked parameter pytrees (one device call per
 generation, see core/egrl.py).
 
-GAT backends: the attention+aggregate inner op of ``_gat`` has two
+GAT backends: the attention+aggregate inner op of ``_gat`` has three
 implementations selected by the ``backend`` argument (default: the
-``REPRO_GAT_BACKEND`` env var, default "auto"):
+``REPRO_GAT_BACKEND`` env var, default "auto"), ALL differentiable —
+training and inference share one dispatch:
 
+- ``"chunked"`` — pure-XLA online-softmax scan over neighbor blocks
+  with a recompute-in-backward ``custom_vjp``
+  (repro.kernels.gat_mp.chunked); peak attention transient (N, C, H).
+  The path CPU/GPU training actually uses.
+- ``"pallas"`` — the fused VMEM-resident kernel pair in
+  repro.kernels.gat_mp (forward emits softmax residuals, backward
+  recomputes attention block-wise; wrapped in ``custom_vjp`` by
+  ops.py).  Compiled on TPU; ``interpret`` mode elsewhere (slow — for
+  parity testing only, see tests/test_gat_backend.py).
 - ``"jnp"``  — dense (N, N, H) score materialization in plain jnp.
-  Differentiable; always available.  The SAC learner pins this backend
-  for its loss functions (pallas_call has no autodiff rule).
-- ``"pallas"`` — the fused VMEM-resident kernel in
-  repro.kernels.gat_mp (scores/mask/softmax/aggregate in one pass, no
-  HBM round-trips).  ``interpret`` mode is auto-selected by platform:
-  compiled on TPU, interpreter elsewhere (slow — for parity testing
-  only, see tests/test_gat_backend.py).
-- ``"auto"`` — "pallas" on TPU, "jnp" otherwise.
+  Opt-in only (parity oracle / tiny graphs): no default path selects it.
+- ``"auto"`` — measurement-driven: a one-time per-(N, D, H, dtype)
+  micro-benchmark (core/gat_tune.py) times the non-materializing
+  candidates fwd and fwd+bwd and caches the winner per process.  The
+  ``gat`` section of benchmarks/BENCH_inner_loop.json records the same
+  timings (``bench_gat``).
 """
 from __future__ import annotations
 
 import math
-import os
 from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import gat_tune
+from repro.utils.envpolicy import env_policy
 from repro.utils.params import ParamDef, init_params
 
 HIDDEN = 128
@@ -41,15 +50,22 @@ HEADS = 4
 N_SUB = 2    # weight / activation sub-actions
 N_TIER = 3
 
-GAT_BACKEND = os.environ.get("REPRO_GAT_BACKEND", "auto")
+GAT_BACKENDS = ("auto", "jnp", "chunked", "pallas")
 
 
-def resolve_backend(backend: Optional[str] = None) -> str:
-    """Resolve a backend request to a concrete one ("jnp" | "pallas")."""
-    b = backend or GAT_BACKEND
+def resolve_backend(backend: Optional[str] = None, *, n: Optional[int] = None,
+                    d: int = HIDDEN, heads: int = HEADS,
+                    dtype=jnp.float32) -> str:
+    """Resolve a backend request to a concrete one ("jnp" | "chunked" |
+    "pallas").  ``auto`` with a shape autotunes (core/gat_tune.py);
+    without one it falls back to the platform's non-materializing
+    default ("pallas" compiled on TPU, "chunked" elsewhere)."""
+    b = env_policy("REPRO_GAT_BACKEND", choices=GAT_BACKENDS,
+                   default="auto", override=backend)
     if b == "auto":
-        b = "pallas" if jax.default_backend() == "tpu" else "jnp"
-    assert b in ("jnp", "pallas"), f"unknown GAT backend {b!r}"
+        if n is None:
+            return "pallas" if jax.default_backend() == "tpu" else "chunked"
+        return gat_tune.autotune(n, d, heads, dtype).backend
     return b
 
 
@@ -88,11 +104,18 @@ def _gat(p, h, adj_mask, backend: Optional[str] = None):
     zh = z.reshape(N, HEADS, hd)
     e_src = jnp.einsum("nhd,hd->nh", zh, p["a_src"])  # (N, H)
     e_dst = jnp.einsum("nhd,hd->nh", zh, p["a_dst"])
-    if resolve_backend(backend) == "pallas":
-        # fused kernel: no dense (N, N, H) attention materialization
+    b = resolve_backend(backend, n=N, d=D, dtype=z.dtype)
+    if b == "pallas":
+        # fused kernel pair: no dense (N, N, H) attention materialization
         from repro.kernels.gat_mp.ops import gat_mp
         out = gat_mp(z, e_src, e_dst, adj_mask.astype(z.dtype), heads=HEADS,
                      interpret=jax.default_backend() != "tpu")
+    elif b == "chunked":
+        # pure-XLA custom_vjp: (N, C, H) transients, recompute-in-backward
+        from repro.kernels.gat_mp.ops import gat_mp_chunked
+        out = gat_mp_chunked(z, e_src, e_dst, adj_mask.astype(z.dtype),
+                             heads=HEADS,
+                             chunk=gat_tune.chunk_for(N, D, HEADS, z.dtype))
     else:
         e = jax.nn.leaky_relu(e_src[:, None, :] + e_dst[None, :, :], 0.2)
         e = jnp.where(adj_mask[:, :, None], e, -1e30)  # (N, N, H)

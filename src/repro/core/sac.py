@@ -19,9 +19,11 @@ Two learners share the same losses and the same one-jitted-scan update
 - ``ZooSAC`` — the multi-workload member of ``ZooEGRL``: actor and
   double-Q critic run over a size-bucketed zoo (``BucketedZoo``, PR 5) —
   per gradient step, each bucket contributes a ``(G_k, B)`` replay batch
-  evaluated at ITS OWN padded width, so the critic's dense attention
-  tensors are ``(G_k, B, N_max_k, N_max_k)`` instead of zoo-wide
-  ``N_max``.  The scan's per-step inputs are pytrees (one array per
+  evaluated at ITS OWN padded width.  Since the fused GAT op gained its
+  ``custom_vjp`` pair, both learners train on the default GAT backend —
+  no loss function materializes a dense ``(N, N, H)`` attention tensor
+  (the attention transient is ``(N_max_k, C, H)`` per neighbor chunk on
+  the chunked backend).  The scan's per-step inputs are pytrees (one array per
   bucket); losses are the per-graph SACLearner losses averaged over the
   whole zoo, so a one-graph batch reduces to ``SACLearner`` exactly (to
   ~1e-6, see tests/test_zoo_egrl.py) — the single-graph learner is the
@@ -71,7 +73,8 @@ def critic_defs(n_features: int, hidden: int = gnn.HIDDEN):
     return d
 
 
-def critic_forward_masked(p, feats, adj, node_mask, act_onehot):
+def critic_forward_masked(p, feats, adj, node_mask, act_onehot,
+                          backend=None):
     """Double-Q critic over ONE padded graph: feats (N_max, F), adj
     (N_max, N_max) with padding rows self-loop-only, node_mask (N_max,)
     1.0 = real, act_onehot (N_max, 2, 3) -> (q1, q2) scalars.
@@ -82,26 +85,36 @@ def critic_forward_masked(p, feats, adj, node_mask, act_onehot):
     reach the Q values.  With no padding every mask op is an identity
     and sum/count equals the mean pool — ``critic_forward`` (the
     single-graph learner's form) is exactly this with an all-ones mask.
-    Pins the "jnp" GAT backend (runs under jax.grad).
+
+    Runs under ``jax.grad`` on the DEFAULT GAT backend: every backend is
+    differentiable since the fused op gained its ``custom_vjp`` pair, so
+    no dense ``(N, N, H)`` attention tensor is materialized in training
+    (the former "jnp" pin is gone; tests/test_gat_backend.py asserts the
+    training jaxpr is free of the dense intermediate).  The two Q heads
+    share the GAT trunk and run as one vmapped two-wide forward.
     """
     live = node_mask.astype(feats.dtype)
     mask = adj > 0
     x = jnp.concatenate([feats, act_onehot.reshape(feats.shape[0], 6)], -1)
     h = jnp.tanh((x * live[:, None]) @ p["inp"]) * live[:, None]
-    h = gnn._gat(p["gat0"], h, mask, backend="jnp") * live[:, None]
-    h = gnn._gat(p["gat1"], h, mask, backend="jnp") * live[:, None]
+    h = gnn._gat(p["gat0"], h, mask, backend) * live[:, None]
+    h = gnn._gat(p["gat1"], h, mask, backend) * live[:, None]
     g = h.sum(axis=0) / jnp.maximum(live.sum(), 1.0)
-    z1 = jax.nn.elu(g @ p["h1"] + p["b1"])
-    z2 = jax.nn.elu(g @ p["h2"] + p["b2"])
-    return (z1 @ p["q1"])[0], (z2 @ p["q2"])[0]
+    heads = {"h": jnp.stack([p["h1"], p["h2"]]),
+             "b": jnp.stack([p["b1"], p["b2"]]),
+             "q": jnp.stack([p["q1"], p["q2"]])}
+    q = jax.vmap(lambda hp: (jax.nn.elu(g @ hp["h"] + hp["b"]) @ hp["q"])[0])(
+        heads)
+    return q[0], q[1]
 
 
-def critic_forward(p, feats, adj, act_onehot):
+def critic_forward(p, feats, adj, act_onehot, backend=None):
     """act_onehot (N,2,3) float -> (q1, q2) scalars: the no-padding
     (all-real-nodes) case of ``critic_forward_masked`` — one critic
     implementation to maintain for both learners."""
     return critic_forward_masked(
-        p, feats, adj, jnp.ones(feats.shape[0], feats.dtype), act_onehot)
+        p, feats, adj, jnp.ones(feats.shape[0], feats.dtype), act_onehot,
+        backend)
 
 
 def _adam_init(params):
@@ -172,8 +185,8 @@ class SACLearner:
             return jnp.mean((q1 - rewards) ** 2 + (q2 - rewards) ** 2)
 
         def actor_loss(ap, cp):
-            # "jnp" backend: differentiated through (see critic_forward)
-            logits = gnn.gnn_forward(ap, feats_, adj_, backend="jnp")
+            # default backend: every GAT backend differentiates (custom_vjp)
+            logits = gnn.gnn_forward(ap, feats_, adj_)
             probs = jax.nn.softmax(logits, axis=-1)
             q1, q2 = critic_forward(cp, feats_, adj_, probs)
             ent = gnn.entropy(logits)
@@ -286,15 +299,14 @@ class ZooSAC:
             return jnp.mean(jnp.concatenate(losses))
 
         def actor_loss(ap, cp):
-            # "jnp" backend: differentiated through (see critic_forward)
+            # default backend: every GAT backend differentiates (custom_vjp)
             def one_graph(f, a, m, lg, pr):
                 q1, q2 = critic_forward_masked(cp, f, a, m, pr)
                 return jnp.minimum(q1, q2), gnn.entropy_masked(lg, m)
 
             qs, ents = [], []
             for fe, ad, li, nr in buckets:
-                logits = gnn.gnn_forward_zoo(ap, fe, ad, li, nr,
-                                             backend="jnp")
+                logits = gnn.gnn_forward_zoo(ap, fe, ad, li, nr)
                 probs = jax.nn.softmax(logits, axis=-1)
                 q, e = jax.vmap(one_graph)(fe, ad, li, logits, probs)
                 qs.append(q)

@@ -1,0 +1,124 @@
+"""Pure-XLA chunked GAT attention: the differentiable non-Pallas lowering
+of the fused ``gat_mp`` op.  Scans over neighbor (column) blocks with an
+online softmax, so the peak attention transient is ``(N, C, H)`` instead
+of the dense ``(N, N, H)`` score tensor — linear in N for a fixed chunk.
+The backward recomputes each block's attention weights from the saved
+per-row softmax residuals (``lse = max + log denominator``) instead of
+saving probabilities, mirroring ``models/attention.py``'s flash backward.
+
+This is the lowering CPU/GPU training actually exercises (interpret-mode
+Pallas is parity-only off-TPU); ``kernels/gat_mp/ops.py`` wraps the pair
+in ``jax.custom_vjp``.
+
+Math (matches ``core/gnn._gat``'s dense jnp path exactly, incl. the
+``x >= 0`` leaky-relu branch convention of ``jax.nn.leaky_relu``):
+
+    pre[i,j,h] = e_src[i,h] + e_dst[j,h]
+    s          = where(adj[i,j] > 0, leaky_relu(pre, 0.2), -1e30)
+    alpha      = softmax_j(s);  out[i] = sum_j alpha[i,j] * zh[j]
+
+Only the j (neighbor/source) axis is padded to a chunk multiple — pad
+columns carry a zero adjacency, enter every softmax with exactly-zero
+weight, and their (sliced-off) gradients are exact zeros, so real-row
+values and grads are independent of the padding.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _chunk_cols(z, e_dst, adj, heads: int, chunk: int):
+    """Pad the j axis to a chunk multiple and reshape to per-chunk stacks:
+    zh (n_c, C, H, hd), e_dst (n_c, C, H), adj (n_c, N, C)."""
+    N, D = z.shape
+    hd = D // heads
+    pad = (-N) % chunk
+    if pad:
+        z = jnp.pad(z, ((0, pad), (0, 0)))
+        e_dst = jnp.pad(e_dst, ((0, pad), (0, 0)))
+        adj = jnp.pad(adj, ((0, 0), (0, pad)))
+    n_c = (N + pad) // chunk
+    zj = z.reshape(n_c, chunk, heads, hd)
+    ej = e_dst.reshape(n_c, chunk, heads)
+    aj = jnp.moveaxis(adj.reshape(N, n_c, chunk), 1, 0)
+    return zj, ej, aj
+
+
+def _block_scores(e_src, ec, ac):
+    """Masked leaky-relu scores of one column block: (N, C, H)."""
+    pre = e_src[:, None, :] + ec[None, :, :]
+    s = jnp.where(pre >= 0, pre, 0.2 * pre)
+    return pre, jnp.where(ac[:, :, None] > 0, s, NEG_INF)
+
+
+def gat_chunked_fwd(z, e_src, e_dst, adj, *, heads: int, chunk: int):
+    """Online-softmax forward.  z (N, D); e_src/e_dst (N, H); adj (N, N)
+    float mask.  Returns (out (N, D), lse (N, H) f32) — lse is the
+    per-row softmax residual (running max + log running denominator) the
+    backward recomputation needs."""
+    N, D = z.shape
+    heads_ = heads
+    zj, ej, aj = _chunk_cols(z, e_dst, adj, heads, chunk)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        zc, ec, ac = xs
+        _, s = _block_scores(e_src, ec, ac)
+        m_new = jnp.maximum(m, s.max(axis=1))                 # (N, H)
+        corr = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[:, None, :])                    # (N, C, H)
+        l_new = l * corr + p.sum(axis=1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "njh,jhd->nhd", p, zc, preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((N, heads_), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((N, heads_), jnp.float32)
+    a0 = jnp.zeros((N, heads_, D // heads_), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (zj, ej, aj))
+    l = jnp.maximum(l, 1e-30)
+    out = (acc / l[..., None]).reshape(N, D).astype(z.dtype)
+    return out, m + jnp.log(l)
+
+
+def gat_chunked_bwd(z, e_src, e_dst, adj, out, lse, g, *, heads: int,
+                    chunk: int):
+    """Recompute-in-backward grads: given the cotangent g (N, D) and the
+    forward residuals (out, lse), return (dz, de_src, de_dst) without
+    ever materializing an (N, N, H) tensor.  Per column block:
+
+        alpha  = exp(s - lse)                       # recomputed (N, C, H)
+        dz_j  += sum_i alpha[i,j] * g[i]
+        ds     = alpha * (g·zh_j - g·out_i)         # softmax backward
+        dpre   = ds * leaky'(pre), masked
+        de_src = sum_j dpre;  de_dst_j = sum_i dpre
+    """
+    N, D = z.shape
+    hd = D // heads
+    gh = g.reshape(N, heads, hd).astype(jnp.float32)
+    oh = out.reshape(N, heads, hd).astype(jnp.float32)
+    drow = (gh * oh).sum(-1)                                  # (N, H)
+    zj, ej, aj = _chunk_cols(z, e_dst, adj, heads, chunk)
+
+    def body(de_src, xs):
+        zc, ec, ac = xs
+        pre, s = _block_scores(e_src, ec, ac)
+        p = jnp.exp(s - lse[:, None, :])                      # alpha (N,C,H)
+        dz_c = jnp.einsum("njh,nhd->jhd", p, gh,
+                          preferred_element_type=jnp.float32)
+        dalpha = jnp.einsum("nhd,jhd->njh", gh, zc,
+                            preferred_element_type=jnp.float32)
+        ds = p * (dalpha - drow[:, None, :])
+        dpre = jnp.where(pre >= 0, ds, 0.2 * ds)
+        dpre = jnp.where(ac[:, :, None] > 0, dpre, 0.0)
+        de_dst_c = dpre.sum(axis=0)                           # (C, H)
+        return de_src + dpre.sum(axis=1), (dz_c, de_dst_c)
+
+    de_src0 = jnp.zeros((N, heads), jnp.float32)
+    de_src, (dzs, deds) = jax.lax.scan(body, de_src0, (zj, ej, aj))
+    dz = dzs.reshape(-1, D)[:N].astype(z.dtype)
+    de_dst = deds.reshape(-1, heads)[:N].astype(e_dst.dtype)
+    return dz, de_src.astype(e_src.dtype), de_dst

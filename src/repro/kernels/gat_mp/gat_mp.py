@@ -1,7 +1,21 @@
-"""Pallas TPU kernel for fused GAT message passing (the EGRL policy's hot
-op): per node block, compute masked attention scores against ALL nodes,
-softmax over neighbors and aggregate — one VMEM-resident fusion instead of
-four HBM round-trips (scores / mask / softmax / matmul).
+"""Pallas TPU kernel pair for fused GAT message passing (the EGRL
+policy's hot op), differentiable end-to-end via the ``jax.custom_vjp``
+wrapper in ``ops.py``.
+
+Forward: per destination-node block, compute masked attention scores
+against ALL nodes, softmax over neighbors and aggregate — one
+VMEM-resident fusion instead of four HBM round-trips (scores / mask /
+softmax / matmul).  Flash-attention style, it also emits the per-row
+softmax residuals (running max ``m`` and denominator ``l``) so the
+backward never needs the ``(N, N, H)`` probability tensor.
+
+Backward: a second kernel over the same destination-node grid that
+recomputes each block's attention weights in VMEM from ``(m, l)`` and
+accumulates grads w.r.t. ``z`` / ``e_src`` / ``e_dst`` (``adj`` is
+non-differentiable).  The ``dz`` / ``de_dst`` outputs use a constant
+block index, so the sequential TPU grid revisits one VMEM buffer and
+accumulates across destination blocks (same pattern as the
+``kernels/flash_attention`` scratch accumulator).
 
 Workload graphs are <= ~1k nodes, so the full (N, H, hd) node-feature
 tensor (~0.5 MB at N=1024, D=128) sits in VMEM; the grid tiles only the
@@ -15,8 +29,11 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+NEG_INF = -1e30
 
-def _kernel(z_ref, esrc_ref, edst_ref, adj_ref, o_ref, *, heads: int):
+
+def _fwd_kernel(z_ref, esrc_ref, edst_ref, adj_ref, o_ref, m_ref, l_ref, *,
+                heads: int):
     z = z_ref[...]                        # (N, H*hd) all nodes
     e_dst = edst_ref[...]                 # (N, H)
     e_src = esrc_ref[...]                 # (bn, H) this block's nodes
@@ -26,11 +43,12 @@ def _kernel(z_ref, esrc_ref, edst_ref, adj_ref, o_ref, *, heads: int):
     bn = e_src.shape[0]
 
     s = e_src[:, None, :] + e_dst[None, :, :]           # (bn, N, H)
-    s = jnp.where(s > 0, s, 0.2 * s)                    # leaky_relu
-    s = jnp.where(adj[:, :, None] > 0, s, -1e30)
-    s = s - s.max(axis=1, keepdims=True)
-    p = jnp.exp(s)
-    p = p / jnp.maximum(p.sum(axis=1, keepdims=True), 1e-30)  # (bn, N, H)
+    s = jnp.where(s >= 0, s, 0.2 * s)                   # leaky_relu
+    s = jnp.where(adj[:, :, None] > 0, s, NEG_INF)
+    m = s.max(axis=1)                                   # (bn, H)
+    p = jnp.exp(s - m[:, None, :])
+    l = p.sum(axis=1)                                   # (bn, H)
+    p = p / jnp.maximum(l, 1e-30)[:, None, :]           # (bn, N, H)
 
     zh = z.reshape(N, heads, hd)
     # batch the head dim through dot_general: (H, bn, N) x (H, N, hd)
@@ -39,18 +57,21 @@ def _kernel(z_ref, esrc_ref, edst_ref, adj_ref, o_ref, *, heads: int):
         (((2,), (1,)), ((0,), (0,))),
         preferred_element_type=jnp.float32)             # (H, bn, hd)
     o_ref[...] = out.transpose(1, 0, 2).reshape(bn, D).astype(o_ref.dtype)
+    m_ref[...] = m.astype(m_ref.dtype)
+    l_ref[...] = l.astype(l_ref.dtype)
 
 
 def gat_mp_pallas(z, e_src, e_dst, adj, *, heads: int, block: int = 128,
                   interpret: bool = True):
-    """z (N, D); e_src/e_dst (N, H); adj (N, N) -> aggregated (N, D).
+    """z (N, D); e_src/e_dst (N, H); adj (N, N) -> (aggregated (N, D),
+    softmax residuals m (N, H), l (N, H)).
 
     N is padded to a multiple of `block` by the ops.py wrapper.
     """
     N, D = z.shape
     bn = min(block, N)
     assert N % bn == 0
-    kern = functools.partial(_kernel, heads=heads)
+    kern = functools.partial(_fwd_kernel, heads=heads)
     return pl.pallas_call(
         kern,
         grid=(N // bn,),
@@ -60,7 +81,99 @@ def gat_mp_pallas(z, e_src, e_dst, adj, *, heads: int, block: int = 128,
             pl.BlockSpec((N, heads), lambda i: (0, 0)),
             pl.BlockSpec((bn, N), lambda i: (i, 0)),
         ],
-        out_specs=pl.BlockSpec((bn, D), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((N, D), z.dtype),
+        out_specs=[
+            pl.BlockSpec((bn, D), lambda i: (i, 0)),
+            pl.BlockSpec((bn, heads), lambda i: (i, 0)),
+            pl.BlockSpec((bn, heads), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((N, D), z.dtype),
+            jax.ShapeDtypeStruct((N, heads), jnp.float32),
+            jax.ShapeDtypeStruct((N, heads), jnp.float32),
+        ],
         interpret=interpret,
     )(z, e_src, e_dst, adj)
+
+
+def _bwd_kernel(z_ref, esrc_ref, edst_ref, adj_ref, m_ref, l_ref, o_ref,
+                g_ref, dz_ref, desrc_ref, dedst_ref, *, heads: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        # dz / de_dst blocks revisit the same VMEM buffer every grid step
+        dz_ref[...] = jnp.zeros_like(dz_ref)
+        dedst_ref[...] = jnp.zeros_like(dedst_ref)
+
+    z = z_ref[...]                        # (N, D)
+    N, D = z.shape
+    hd = D // heads
+    e_src = esrc_ref[...]                 # (bn, H)
+    e_dst = edst_ref[...]                 # (N, H)
+    adj = adj_ref[...]                    # (bn, N)
+    m = m_ref[...]                        # (bn, H)
+    l = jnp.maximum(l_ref[...], 1e-30)
+    bn = e_src.shape[0]
+    g = g_ref[...].reshape(bn, heads, hd).astype(jnp.float32)
+    o = o_ref[...].reshape(bn, heads, hd).astype(jnp.float32)
+
+    pre = e_src[:, None, :] + e_dst[None, :, :]         # (bn, N, H)
+    s = jnp.where(pre >= 0, pre, 0.2 * pre)
+    s = jnp.where(adj[:, :, None] > 0, s, NEG_INF)
+    p = jnp.exp(s - m[:, None, :]) / l[:, None, :]      # alpha (bn, N, H)
+
+    # dz_j += sum_i alpha_ij g_i : (H, N, bn) x (H, bn, hd) -> (H, N, hd)
+    dz = jax.lax.dot_general(
+        p.transpose(2, 1, 0), g.transpose(1, 0, 2),
+        (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)
+    dz_ref[...] += dz.transpose(1, 0, 2).reshape(N, D).astype(dz_ref.dtype)
+
+    zh = z.reshape(N, heads, hd)
+    # dalpha_ij = g_i . zh_j : (H, bn, hd) x (H, N, hd) -> (H, bn, N)
+    dalpha = jax.lax.dot_general(
+        g.transpose(1, 0, 2), zh.transpose(1, 0, 2),
+        (((2,), (2,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32).transpose(1, 2, 0)  # (bn, N, H)
+    drow = (g * o).sum(-1)                              # (bn, H)
+    ds = p * (dalpha - drow[:, None, :])
+    dpre = jnp.where(pre >= 0, ds, 0.2 * ds)
+    dpre = jnp.where(adj[:, :, None] > 0, dpre, 0.0)
+    desrc_ref[...] = dpre.sum(axis=1).astype(desrc_ref.dtype)
+    dedst_ref[...] += dpre.sum(axis=0).astype(dedst_ref.dtype)
+
+
+def gat_mp_bwd_pallas(z, e_src, e_dst, adj, m, l, o, g, *, heads: int,
+                      block: int = 128, interpret: bool = True):
+    """Backward kernel: recompute attention block-wise from the (m, l)
+    residuals and return (dz, de_src, de_dst).  Shapes as the forward;
+    o/g are the forward output and its cotangent, both (N, D)."""
+    N, D = z.shape
+    bn = min(block, N)
+    assert N % bn == 0
+    kern = functools.partial(_bwd_kernel, heads=heads)
+    return pl.pallas_call(
+        kern,
+        grid=(N // bn,),
+        in_specs=[
+            pl.BlockSpec((N, D), lambda i: (0, 0)),
+            pl.BlockSpec((bn, heads), lambda i: (i, 0)),
+            pl.BlockSpec((N, heads), lambda i: (0, 0)),
+            pl.BlockSpec((bn, N), lambda i: (i, 0)),
+            pl.BlockSpec((bn, heads), lambda i: (i, 0)),
+            pl.BlockSpec((bn, heads), lambda i: (i, 0)),
+            pl.BlockSpec((bn, D), lambda i: (i, 0)),
+            pl.BlockSpec((bn, D), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((N, D), lambda i: (0, 0)),
+            pl.BlockSpec((bn, heads), lambda i: (i, 0)),
+            pl.BlockSpec((N, heads), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((N, D), z.dtype),
+            jax.ShapeDtypeStruct((N, heads), e_src.dtype),
+            jax.ShapeDtypeStruct((N, heads), e_dst.dtype),
+        ],
+        interpret=interpret,
+    )(z, e_src, e_dst, adj, m, l, o, g)

@@ -130,12 +130,69 @@ def check(data: dict) -> list:
             _require(errors, "generation.zoo_sac", detail,
                      "update_steps_per_call")
         rows = {k: v for k, v in gen.items()
-                if isinstance(v, dict) and k != "zoo_sac"}
+                if isinstance(v, dict)
+                and k not in ("zoo_sac", "zoo_sac_ms_trajectory")}
         if not rows:
             _fail(errors, "generation: no per-graph rows")
         for name, row in rows.items():
             for key in PER_GRAPH_MS:
                 _require(errors, f"generation.{name}", row, key)
+        # optional PR-over-PR audit trail (merged into the tracked file
+        # only — smoke's fresh temp JSON legitimately lacks it)
+        traj = gen.get("zoo_sac_ms_trajectory")
+        if traj is not None:
+            if not (isinstance(traj, dict) and traj):
+                _fail(errors, "generation.zoo_sac_ms_trajectory: expected "
+                              "a non-empty {pr_label: ms} dict")
+            else:
+                for name in traj:
+                    _require(errors, "generation.zoo_sac_ms_trajectory",
+                             traj, name)
+
+    # ---- gat: backend-autotune audit — per shape, the chosen backend
+    # plus positive fwd/fwd+bwd timings for every candidate (including
+    # the dense jnp oracle).  Never a timing gate: relative speeds vary
+    # by runner, presence and well-formedness do not.
+    gat = data.get("gat")
+    if not isinstance(gat, dict):
+        _fail(errors, "missing section 'gat'")
+    else:
+        _require(errors, "gat", gat, "hidden")
+        _require(errors, "gat", gat, "heads")
+        _require(errors, "gat", gat, "platform", kind=str)
+        shapes = _require(errors, "gat", gat, "shapes", kind=dict)
+        if isinstance(shapes, dict):
+            if not shapes:
+                _fail(errors, "gat.shapes: no n<N> rows")
+            for name, row in shapes.items():
+                if not isinstance(row, dict):
+                    _fail(errors, f"gat.shapes.{name}: expected a dict, "
+                                  f"got {type(row)}")
+                    continue
+                chosen = _require(errors, f"gat.shapes.{name}", row,
+                                  "chosen", kind=str)
+                if chosen == "jnp":
+                    _fail(errors, f"gat.shapes.{name}: auto chose the dense "
+                                  f"'jnp' path — it must never be selected")
+                cands = _require(errors, f"gat.shapes.{name}", row,
+                                 "candidates", kind=dict)
+                if isinstance(cands, dict):
+                    if not cands:
+                        _fail(errors, f"gat.shapes.{name}.candidates: empty")
+                    if isinstance(chosen, str) and cands \
+                            and chosen not in cands:
+                        _fail(errors, f"gat.shapes.{name}: chosen "
+                                      f"{chosen!r} not among the timed "
+                                      f"candidates {sorted(cands)}")
+                    for label, t in cands.items():
+                        if not isinstance(t, dict):
+                            _fail(errors, f"gat.shapes.{name}.candidates."
+                                          f"{label}: expected a dict")
+                            continue
+                        _require(errors, f"gat.shapes.{name}.{label}", t,
+                                 "fwd_us")
+                        _require(errors, f"gat.shapes.{name}.{label}", t,
+                                 "fwd_bwd_us")
 
     # ---- pop_sharding: one row per benched mesh size
     pop = data.get("pop_sharding")
@@ -179,7 +236,7 @@ def main(argv=None) -> int:
             print(f"  - {e}", file=sys.stderr)
         return 1
     print(f"bench-check OK: {path} has all expected sections "
-          f"(rectify, zoo_eval, generation[+zoo_sac], pop_sharding)")
+          f"(rectify, zoo_eval, generation[+zoo_sac], gat, pop_sharding)")
     return 0
 
 
