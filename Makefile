@@ -1,5 +1,5 @@
 # Convenience targets; see ROADMAP.md for the tier-1 verify command.
-.PHONY: test smoke bench bench-zoo bench-gat bench-check docs-check
+.PHONY: test smoke bench bench-zoo bench-gat bench-serve bench-check docs-check
 
 test:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python -m pytest -x -q
@@ -21,6 +21,12 @@ bench-zoo:
 # reference) and the backend `auto` resolves to, per zoo graph size
 bench-gat:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python benchmarks/run.py gat
+
+# placement-service SLOs: p50/p99 time-to-placement split by cache
+# hit/miss, placements/sec and hit rate over a seeded synthetic request
+# stream (part of the inner_loop group, so smoke.sh covers it too)
+bench-serve:
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python benchmarks/run.py serve
 
 # schema gate on the tracked benchmarks/BENCH_inner_loop.json: every
 # inner-loop section present with well-formed fields (never a timing

@@ -369,6 +369,43 @@ def bench_pop_sharding() -> None:
     _update_json("pop_sharding", payload)
 
 
+def bench_serve() -> None:
+    """Serving gate: placement-as-a-service SLOs over a seeded synthetic
+    request stream (launch/serve_placements.py) — p50/p99
+    time-to-placement split by cache hit/miss, placements/sec, cache
+    hit rate, and placement quality.  Writes the ``serve`` section of
+    BENCH_inner_loop.json; tools/bench_check.py gates its SHAPE (and
+    the hit-p50 <= miss-p50 relation), never absolute timings.  The
+    smoke budget (BENCH_STEPS < 200) trims the stream and pins the
+    catalog to one canonical size class so the run stays in seconds."""
+    from repro.launch.serve_placements import serve, synthetic_stream
+
+    if STEPS >= 200:
+        n_req, archs = 50, None            # the full registry catalog
+    else:
+        n_req = 12
+        archs = ["qwen3-0.6b", "mamba2-780m", "zamba2-1.2b",
+                 "granite-3-8b", "qwen2.5-14b"]
+    reqs = synthetic_stream(n_req, seed=0, archs=archs)
+    results, summary = serve(reqs, seed=0, log=None)
+    assert len({r.arch for r in reqs}) >= 5, "stream must span >=5 archs"
+    assert summary["failed"] == 0, "synthetic catalog must serve cleanly"
+
+    print(f"serve_requests,{summary['requests']},"
+          f"archs{summary['archs']}_budget{summary['budget']}")
+    print(f"serve_hit_rate,{summary['hit_rate']},"
+          f"hits{summary['cache_hits']}_misses{summary['cache_misses']}")
+    print(f"serve_hit_p50,{summary['hit_p50_ms']},"
+          f"ms_p99_{summary['hit_p99_ms']}")
+    print(f"serve_miss_p50,{summary['miss_p50_ms']},"
+          f"ms_p99_{summary['miss_p99_ms']}")
+    print(f"serve_throughput,{summary['placements_per_sec']},"
+          f"placements_per_sec")
+    print(f"serve_mean_speedup,{summary['mean_speedup']},"
+          f"egrl_frac_{summary['egrl_frac']}")
+    _update_json("serve", summary)
+
+
 def bench_fig4() -> None:
     from fig4_speedup import run as fig4
     fig4(steps=STEPS, seeds=tuple(range(SEEDS)), log=lambda m: print(m))
@@ -415,6 +452,7 @@ BENCHES = {
     "zoo_sac": bench_zoo_sac,
     "gat": bench_gat,
     "pop_sharding": bench_pop_sharding,
+    "serve": bench_serve,
     "fig4": bench_fig4,
     "fig5": bench_fig5,
     "fig7": bench_fig7,
@@ -425,7 +463,7 @@ BENCHES = {
 # generation and zoo_sac both merge into the shared "generation"
 # section, so either can be refreshed standalone.
 GROUPS = {"inner_loop": ("rectify", "zoo_eval", "generation", "zoo_sac",
-                         "gat", "pop_sharding")}
+                         "gat", "pop_sharding", "serve")}
 
 
 def main(argv=None) -> None:

@@ -3,7 +3,8 @@
 # pass of the inner-loop microbenchmarks — rectify, the zoo-wide
 # GraphBatch evaluation (bench_zoo_eval, incl. the 1k+-node graphs),
 # generation, the zoo SAC learner (bench_zoo_sac), the GAT backend
-# autotune audit (bench_gat), and pop_sharding
+# autotune audit (bench_gat), pop_sharding, and the placement-service
+# SLOs (bench_serve, a trimmed seeded request stream)
 # (BENCH_STEPS=50 keeps the timed loops to a few repetitions).  Invoke
 # directly or via `make smoke`.  `set -e` + run.py's fail-loud main
 # guarantee a non-zero exit when any sub-step raises — no silently

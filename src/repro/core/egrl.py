@@ -61,7 +61,7 @@ flat GraphBatch path (see graphs/bucketed.py's PRNG discipline).
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
+from functools import lru_cache, partial
 from typing import Dict, List, Optional, Sequence
 
 import numpy as np
@@ -117,6 +117,55 @@ def _evolve_with_fitness_mask(evolve_fn, n_g, n_g_pad, n_b, n_b_pad,
     if n_b_pad > n_b:
         fit_b = jnp.where(jnp.arange(n_b_pad) < n_b, fit_b, -jnp.inf)
     return evolve_fn(key, gnn_pop, fit_g, bz_pop, fit_b, logits)
+
+
+# ---------------------------------------------------------------------------
+# Module-level population programs.  These used to be per-instance
+# ``jax.jit`` closures capturing the driver's arrays, so EVERY fresh
+# driver recompiled identical programs (tens of seconds for the GNN
+# population forward).  Hoisted to module scope, the jit cache keys on
+# (function identity, arg shapes/dtypes, pytree structure, static
+# backend) only — a new driver instance over an already-seen geometry
+# reuses the compiled executables.  That is what makes short-budget
+# refinement viable for the persistent placement service
+# (serving/placement_service.py), which constructs a fresh ``ZooEGRL``
+# per miss batch on a canonical padding grid.  The population-SHARDED
+# paths keep per-instance closures: their mesh / out_shardings are
+# instance state (and multi-device runs amortize compiles anyway).
+
+_POP_LOGITS = jax.jit(gnn.population_logits, static_argnames=("backend",))
+_POP_LOGITS_ZOO = jax.jit(gnn.population_logits_zoo,
+                          static_argnames=("backend",))
+_SAMPLE_ACTIONS = jax.jit(jax.vmap(gnn.sample_actions))
+# PG migration: row write at a traced index (one executable per pop
+# geometry, shared by every driver instance)
+_MIGRATE_ROW = jax.jit(lambda pop, vec, idx: pop.at[idx].set(vec))
+
+
+@jax.jit
+def _bz_sample_pop(keys, pops):
+    """Vmapped Boltzmann sample over one stacked (P, flat) sub-population.
+    The node count is recovered from the flat width (``bz.flat_size`` is
+    linear), so one program serves every driver geometry."""
+    n = pops.shape[-1] // bz.flat_size(1)
+    return jax.vmap(lambda k, f: bz.sample(k, bz.from_flat(f, n)))(keys, pops)
+
+
+@lru_cache(maxsize=None)
+def _evolve_program(n_g, n_g_pad, n_b, n_b_pad, n_nodes, e_g, e_b,
+                    tournament_k, crossover_prob, mut_prob, mut_frac,
+                    mut_std):
+    """One jitted EA step per (population split, EA hyperparameter)
+    tuple.  ``jax.jit(partial(...))`` caches by the partial's identity,
+    so the lru_cache makes repeated driver construction with the same
+    config hand back the SAME callable — and with it the compiled
+    executable."""
+    base = partial(ea_mod.evolve, n_nodes=n_nodes, e_g=e_g, e_b=e_b,
+                   n_g=n_g, n_b=n_b, tournament_k=tournament_k,
+                   crossover_prob=crossover_prob, mut_prob=mut_prob,
+                   mut_frac=mut_frac, mut_std=mut_std)
+    return jax.jit(partial(_evolve_with_fitness_mask, base,
+                           n_g, n_g_pad, n_b, n_b_pad))
 
 
 class _EvoPopulation:
@@ -179,28 +228,74 @@ class _EvoPopulation:
         self.bz_pop = self.pop_sharding.put(
             _pad_rows(self.bz_pop, self.n_b_pad))
 
-        ea_kwargs = dict(
-            n_nodes=bz_nodes, e_g=self.e_g, e_b=self.e_b, n_g=self.n_g,
-            n_b=self.n_b, tournament_k=cfg.tournament_k,
-            crossover_prob=cfg.crossover_prob, mut_prob=cfg.mut_prob,
-            mut_frac=cfg.mut_frac, mut_std=cfg.mut_std)
         if self.pop_sharding.active:
+            # sharded paths stay per-instance: mesh/out_shardings are
+            # instance state (see the module-level program comment)
             base_evolve = partial(
-                ea_mod.evolve_sharded, self.pop_sharding.mesh, **ea_kwargs)
+                ea_mod.evolve_sharded, self.pop_sharding.mesh,
+                n_nodes=bz_nodes, e_g=self.e_g, e_b=self.e_b, n_g=self.n_g,
+                n_b=self.n_b, tournament_k=cfg.tournament_k,
+                crossover_prob=cfg.crossover_prob, mut_prob=cfg.mut_prob,
+                mut_frac=cfg.mut_frac, mut_std=cfg.mut_std)
+            self._evolve = jax.jit(partial(
+                _evolve_with_fitness_mask, base_evolve,
+                self.n_g, self.n_g_pad, self.n_b, self.n_b_pad))
+            # PG migration: jitted row write into the last REAL GNN
+            # slot, landing back in the population sharding (a
+            # collective scatter, not a host copy).  Shared by EGRL and
+            # ZooEGRL — both learners' actors flatten to the same (V,)
+            # genome encoding (GNN parameters are graph-size
+            # independent).
+            self._migrate = jax.jit(
+                lambda pop, vec: pop.at[self.n_g - 1].set(vec),
+                out_shardings=self.pop_sharding.sharding)
         else:
-            base_evolve = partial(ea_mod.evolve, **ea_kwargs)
-        self._evolve = jax.jit(partial(
-            _evolve_with_fitness_mask, base_evolve,
-            self.n_g, self.n_g_pad, self.n_b, self.n_b_pad))
-        # PG migration: jitted row write into the last REAL GNN slot; on
-        # a sharded population it lands back in the population sharding
-        # (a collective scatter, not a host copy).  Shared by EGRL and
-        # ZooEGRL — both learners' actors flatten to the same (V,) genome
-        # encoding (GNN parameters are graph-size independent).
-        self._migrate = jax.jit(
-            lambda pop, vec: pop.at[self.n_g - 1].set(vec),
-            **({"out_shardings": self.pop_sharding.sharding}
-               if self.pop_sharding.active else {}))
+            self._evolve = _evolve_program(
+                self.n_g, self.n_g_pad, self.n_b, self.n_b_pad,
+                bz_nodes, self.e_g, self.e_b, cfg.tournament_k,
+                cfg.crossover_prob, cfg.mut_prob, cfg.mut_frac,
+                cfg.mut_std)
+            self._migrate = lambda pop, vec: _MIGRATE_ROW(
+                pop, vec, self.n_g - 1)
+
+    # ------------------------------------------------------- warm start
+    def _prior_logits(self, vec: jnp.ndarray) -> jnp.ndarray:
+        """Posterior logits of the flat GNN params ``vec`` over this
+        driver's Boltzmann node grid (subclass hook: (N, 2, 3) for the
+        per-graph driver, the bucket-major (n_eff, 2, 3) grid for the
+        zoo driver)."""
+        raise NotImplementedError
+
+    def warm_start(self, vec, *, gnn_frac: float = 0.5,
+                   noise_std: float = 0.05, t_init: float = 0.5):
+        """Seed the population from a trained policy's flat GNN params
+        (zero-shot warm start — how the placement service turns its
+        accumulated prior into a head start for each miss batch's
+        refinement).  GNN row 0 becomes the prior EXACTLY (so one elite
+        generation preserves it verbatim), the next ``gnn_frac`` of the
+        sub-population noisy copies, the rest keep their random init
+        for diversity; EVERY Boltzmann genome is re-seeded from the
+        prior's posterior logits (Algorithm 2's GNN->Boltzmann seeding,
+        applied at init time via ``bz.seed_from_logits``).  Draws from
+        the driver's key stream, so warm-started trajectories are
+        deterministic per (cfg.seed, call order); padded sharding rows
+        stay untouched and the result is re-placed in the population
+        sharding."""
+        vec = jnp.asarray(vec, jnp.float32)
+        if self.n_g:
+            n_seed = max(1, int(round(gnn_frac * self.n_g)))
+            rows = [vec] + [
+                vec + noise_std * jax.random.normal(self._k(), vec.shape)
+                for _ in range(n_seed - 1)]
+            self.gnn_pop = self.pop_sharding.put(jnp.concatenate(
+                [jnp.stack(rows), self.gnn_pop[n_seed:]]))
+        if self.n_b:
+            logits = self._prior_logits(vec)
+            seeds = [bz.seed_from_logits(logits, self._k(), t_init)
+                     for _ in range(self.n_b)]
+            rows = [bz.to_flat(b.prior, b.log_t) for b in seeds]
+            self.bz_pop = self.pop_sharding.put(jnp.concatenate(
+                [jnp.stack(rows), self.bz_pop[self.n_b:]]))
 
 
 @dataclasses.dataclass
@@ -246,14 +341,13 @@ class EGRL(_EvoPopulation):
         self._split_population()
         self._init_populations(self.feats.shape[1], graph.n, pop_shards)
 
-        # ---- vmapped population programs (auto-SPMD over sharded pops)
-        feats, adj = self.feats, self.adj
-        self._pop_gnn_logits = jax.jit(
-            lambda pop: gnn.population_logits(self._template, feats, adj, pop))
-        self._pop_sample = jax.jit(
-            jax.vmap(lambda k, lg: gnn.sample_actions(k, lg)))
-        self._pop_boltz = jax.jit(jax.vmap(
-            lambda k, f: bz.sample(k, bz.from_flat(f, graph.n))))
+        # ---- vmapped population programs (auto-SPMD over sharded
+        # pops): bound module-level jits, so a second EGRL on the same
+        # graph geometry reuses the compiled executables
+        self._pop_gnn_logits = partial(
+            _POP_LOGITS, self._template, self.feats, self.adj)
+        self._pop_sample = _SAMPLE_ACTIONS
+        self._pop_boltz = _bz_sample_pop
 
         self.steps = 0
         self.best_reward = -np.inf
@@ -362,6 +456,9 @@ class EGRL(_EvoPopulation):
         return self.history
 
     # ----------------------------------------------------- deployment API
+    def _prior_logits(self, vec):
+        return self._pop_gnn_logits(vec[None])[0]
+
     def best_policy_logits(self):
         """Logits of the top-ranked policy in the population (deployment):
         the best GNN, else the SAC actor, else the best Boltzmann prior
@@ -460,24 +557,24 @@ class ZooEGRL(_EvoPopulation):
         self._split_population()
         self._init_populations(n_features, self.n_eff, pop_shards)
 
-        # per-bucket jitted programs: each closure captures ITS bucket's
-        # arrays, so for a single-bucket zoo the traces are exactly the
-        # flat path's; K buckets -> K cached executables per program
-        # (K small and static, so retracing is bounded)
-        def logits_for(b):
-            return jax.jit(lambda pop: gnn.population_logits_zoo(
-                self._template, b.feats, b.adj, b.node_mask, b.n_nodes,
-                pop))
-
-        self._pop_logits = [logits_for(b) for b in self.zoo.buckets]
+        # per-bucket population forwards: bound module-level jits, so a
+        # single-bucket zoo traces exactly the flat path AND a second
+        # ZooEGRL over the same bucket geometry (the placement service
+        # builds one per miss batch on a canonical padding grid) reuses
+        # the compiled executables; K buckets -> K cached entries per
+        # geometry (K small and static, so retracing is bounded)
+        self._pop_logits = [
+            partial(_POP_LOGITS_ZOO, self._template, b.feats, b.adj,
+                    b.node_mask, b.n_nodes)
+            for b in self.zoo.buckets]
         # one key per genome samples all G graphs' sub-actions; with
         # K > 1 buckets the genome key is split once per bucket
         # (bucket_keys_batch; K == 1 passes the keys through unchanged)
-        self._pop_sample = jax.jit(
-            jax.vmap(lambda k, lg: gnn.sample_actions(k, lg)))
-        # Boltzmann: ONE flat (n_eff, 2) sample per genome, split into
-        # the per-bucket (G_k, N_max_k, 2) stacks (bucket-major layout;
-        # a single bucket reduces to the flat reshape)
+        self._pop_sample = _SAMPLE_ACTIONS
+        # Boltzmann: ONE flat (n_eff, 2) sample per genome (module-level
+        # jit), split eagerly into the per-bucket (G_k, N_max_k, 2)
+        # stacks (bucket-major layout; a single bucket reduces to the
+        # flat reshape — device slices, bitwise the same rows)
         offs = np.concatenate(
             [[0], np.cumsum([b.n_graphs * b.n_max
                              for b in self.zoo.buckets])])
@@ -488,9 +585,8 @@ class ZooEGRL(_EvoPopulation):
                     -1, b.n_graphs, b.n_max, 2)
                 for k, b in enumerate(self.zoo.buckets))
 
-        self._pop_boltz = jax.jit(lambda ks, pops: boltz_split(
-            jax.vmap(lambda k, f: bz.sample(
-                k, bz.from_flat(f, self.n_eff)))(ks, pops)))
+        self._pop_boltz = lambda ks, pops: boltz_split(
+            _bz_sample_pop(ks, pops))
 
         self.steps = 0
         self.best_reward = np.full(self.n_graphs, -np.inf)
@@ -602,6 +698,12 @@ class ZooEGRL(_EvoPopulation):
                     f"best fitness {rec['best_fitness']:.3f} "
                     f"valid {rec['valid_frac']:.2f}")
         return self.history
+
+    def _prior_logits(self, vec):
+        # bucket-major (n_eff, 2, 3) grid, matching the bz genome layout
+        return jnp.concatenate(
+            [f(vec[None]).reshape(1, -1, 2, 3)
+             for f in self._pop_logits], axis=1)[0]
 
     def best_gnn_vec(self) -> Optional[np.ndarray]:
         """Flat params of the best GNN after a generation (row 0); usable

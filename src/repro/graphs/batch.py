@@ -127,11 +127,23 @@ def _padded_sim_arrays(g: WorkloadGraph, arr: dict, n_max: int,
 
 
 def build_graph_batch(graphs: Sequence[WorkloadGraph],
-                      n_max: int = None) -> GraphBatch:
+                      n_max: int = None, *, w_max: int = None,
+                      in_width: int = None,
+                      release_width: int = None) -> GraphBatch:
     """Stack heterogeneous workloads into one padded GraphBatch.
 
     ``n_max`` optionally over-pads beyond the largest graph (used by the
-    padding-invariance tests); it must be >= max(g.n).
+    padding-invariance tests); it must be >= max(g.n).  ``w_max`` /
+    ``in_width`` / ``release_width`` are MINIMUM widths for the release
+    ring, the per-node producer list and the release-index table — the
+    content-derived values are rounded UP to them, never down.  All
+    three paddings are bit-inert by the module-docstring discipline
+    (extra ring slots are never touched, extra -1 producer/release
+    entries are skipped identically), so over-padding lets callers pin
+    every array shape to a canonical grid: the placement service
+    (serving/placement_service.py) pads miss batches to power-of-two
+    dims so jitted executables are reused across batches instead of
+    retracing per batch geometry.
     """
     from repro.memsim.compiler import compiler_reference
 
@@ -142,11 +154,16 @@ def build_graph_batch(graphs: Sequence[WorkloadGraph],
     assert n_max >= largest, (n_max, largest)
     max_in = max(1, max((len(p) for arr in arrs
                          for p in arr["producers_of"]), default=0))
-    w_max = max(int((arr["last_consumer"] - np.arange(g.n)).max()) + 1
-                for g, arr in zip(graphs, arrs))
+    if in_width is not None:
+        max_in = max(max_in, in_width)
+    w_need = max(int((arr["last_consumer"] - np.arange(g.n)).max()) + 1
+                 for g, arr in zip(graphs, arrs))
+    w_max = w_need if w_max is None else max(w_max, w_need)
     per_graph = [_padded_sim_arrays(g, arr, n_max, w_max, max_in)
                  for g, arr in zip(graphs, arrs)]
     max_release = max(p["release_idx"].shape[1] for p in per_graph)
+    if release_width is not None:
+        max_release = max(max_release, release_width)
     for p in per_graph:
         ridx = p["release_idx"]
         p["release_idx"] = np.concatenate(

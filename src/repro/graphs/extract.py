@@ -108,6 +108,37 @@ def _ssm_nodes(b: _B, cfg: ModelConfig, i: int, S: int, B: int, decode: bool,
     return i
 
 
+def extract_for(arch: str, shape_name: str) -> WorkloadGraph:
+    """Resolve (arch, shape) request strings to a WorkloadGraph — the
+    request-facing bridge the placement service and the CLIs share.
+
+    ``arch`` is a registry id (repro.configs.registry) or a paper
+    workload name (repro.graphs.zoo.PAPER_WORKLOADS); ``shape_name`` is
+    a SHAPES key (ignored for paper workloads, which carry their own
+    fixed shape).  Raises ``KeyError`` naming the unknown id — the
+    fail-loud surface ``serving/placement_service.py`` converts into a
+    failed PlacementResult.  Deterministic: the same request always
+    yields the same graph (and so the same canonical hash).
+    """
+    from repro.configs.base import SHAPES, supports_shape
+    from repro.configs.registry import ARCH_IDS, get_config
+    from repro.graphs.zoo import PAPER_WORKLOADS
+
+    if arch in PAPER_WORKLOADS:
+        return PAPER_WORKLOADS[arch]()
+    if arch not in ARCH_IDS:
+        raise KeyError(f"unknown arch {arch!r}; known: "
+                       f"{', '.join(tuple(ARCH_IDS) + tuple(PAPER_WORKLOADS))}")
+    if shape_name not in SHAPES:
+        raise KeyError(f"unknown shape {shape_name!r}; known: "
+                       f"{', '.join(SHAPES)}")
+    cfg = get_config(arch)
+    ok, why = supports_shape(cfg, SHAPES[shape_name])
+    if not ok:
+        raise KeyError(f"{arch} does not support {shape_name}: {why}")
+    return extract_graph(cfg, SHAPES[shape_name])
+
+
 def extract_graph(cfg: ModelConfig, shape: ShapeCfg, *,
                   mesh_data: int = 16, mesh_model: int = 16) -> WorkloadGraph:
     """Graph of ONE chip's SPMD shard (DESIGN.md §2): weights divided by the

@@ -122,6 +122,14 @@ class WorkloadGraph:
             last[s] = max(last[s], d)
         return int((last - np.arange(self.n)).max()) + 1
 
+    def canonical_hash(self) -> str:
+        """Structure-only content hash (see ``repro.graphs.hashing``):
+        identical for topologically equivalent relabelings, different
+        for any simulator-visible perturbation.  The placement cache
+        key of ``serving/placement_service.py``."""
+        from repro.graphs.hashing import canonical_hash
+        return canonical_hash(self)
+
     def validate(self):
         for s, d in self.edges:
             assert 0 <= s < d < self.n, (s, d, "edges must be topo-ordered")

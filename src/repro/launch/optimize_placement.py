@@ -14,9 +14,9 @@ import os
 import numpy as np
 
 from repro.configs.base import SHAPES
-from repro.configs.registry import ARCH_IDS, get_config
+from repro.configs.registry import ARCH_IDS
 from repro.core.egrl import EGRL, EGRLConfig
-from repro.graphs.extract import extract_graph
+from repro.graphs.extract import extract_for
 from repro.graphs.zoo import PAPER_WORKLOADS
 from repro.memsim import tiers as T
 from repro.memsim.compiler import compiler_reference
@@ -25,10 +25,7 @@ import jax.numpy as jnp
 
 
 def make_graph(arch: str, shape_name: str):
-    if arch in PAPER_WORKLOADS:
-        return PAPER_WORKLOADS[arch]()
-    cfg = get_config(arch)
-    return extract_graph(cfg, SHAPES[shape_name])
+    return extract_for(arch, shape_name)
 
 
 def plan_from_mapping(graph, mapping: np.ndarray, meta: dict) -> dict:

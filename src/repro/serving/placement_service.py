@@ -1,0 +1,359 @@
+"""Placement-as-a-service: a persistent optimizer server answering
+"(arch, shape) -> memory placement" requests.
+
+The paper's agent optimizes ONE workload per training run; a serving
+deployment instead sees a stream of placement requests over a catalog
+of architectures, most of them repeats.  This module turns the EGRL
+stack into that server:
+
+- **Graph-hash cache.**  Every request is extracted to a
+  ``WorkloadGraph`` (graphs/extract.py) and keyed by its CANONICAL
+  content hash (graphs/hashing.py) — not the (arch, shape) pair — so
+  two registry entries that lower to the same graph share one cache
+  slot, and any simulator-visible change (a dim, an edge, a ring
+  width) misses.  Hits are answered at submit time without touching the
+  evaluator (asserted by tests/test_placement_service.py via the
+  ``evaluator_calls`` counter).
+
+- **Miss queue -> canonical batch -> warm-started refinement.**
+  Misses queue up; a ``tick()`` drains up to ``batch_max`` distinct
+  graphs, groups them by power-of-two size class, and runs a SHORT
+  EGRL refinement (``budget`` generations of an EA-mode ``ZooEGRL``)
+  per class over a single-bucket zoo padded to a canonical grid:
+  pow2 node count, ring width = the class width, pow2 producer /
+  release-table widths, graph slots cyclically filled to ``batch_max``
+  and renamed ``slot0..`` (GraphBatch names are STATIC pytree
+  metadata).  All of that padding is bit-inert (graphs/batch.py), and
+  it pins every array shape + treedef, so the module-level jitted
+  programs of core/egrl.py are compiled ONCE per class and reused by
+  every subsequent miss batch — compile cost is a first-request tax,
+  not a per-request one.
+
+- **Zero-shot warm start.**  The service carries the best GNN genome
+  out of each refinement (``best_gnn_vec``) and seeds the next miss
+  batch's population with it (``ZooEGRL.warm_start``: exact prior in
+  row 0, noisy copies, Boltzmann genomes re-seeded from the prior's
+  logits).  GNN parameters are graph-size independent, so the prior
+  transfers across size classes; the server literally gets better at
+  placing the longer it runs (tested as: warm-started refinement is
+  never worse than cold at equal budget).  Refinement is best-effort:
+  if the evolved best does not beat the heuristic compiler (short
+  budgets often leave only invalid mappings), the service serves the
+  always-valid compiler reference mapping instead — a placement answer
+  is NEVER invalid and never slower than the compiler's.
+
+- **Fault isolation.**  Extraction failures (unknown arch, unsupported
+  shape) fail the one request at submit.  A refinement failure re-runs
+  the class one graph at a time, so a poisoned graph fails alone and
+  the rest of the batch is still served; failures are never cached, and
+  ``tick()`` always answers every graph it drained, so the queue cannot
+  wedge (``run_until_drained`` asserts forward progress).
+
+Determinism: each miss batch's refinement is seeded by folding the
+SORTED member hashes with the service seed, and the batch is built in
+hash order — so placements depend on the request CONTENT (and the
+order in which batches were formed, via the evolving prior), not on
+intra-tick arrival order.  Two fresh services fed the same stream
+produce bit-identical placements and the same hit/miss sequence.
+
+Env knobs (utils/envpolicy.py, fail-loud):
+
+- ``REPRO_SERVE_CACHE``  — "on" (default) | "off" (every request
+  refines; for benchmarking the miss path).
+- ``REPRO_SERVE_BUDGET`` — "auto" (default, 2) | int: refinement
+  generations per miss batch.
+- ``REPRO_SERVE_BATCH``  — "auto" (default, 4) | int: max distinct
+  graphs per refinement batch AND the canonical graph-slot count.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import time
+from typing import Dict, Iterable, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.egrl import EGRLConfig, ZooEGRL
+from repro.graphs.batch import build_graph_batch
+from repro.graphs.extract import extract_for
+from repro.graphs.graph import WorkloadGraph
+from repro.memsim.compiler import compiler_reference
+from repro.utils.envpolicy import env_policy
+
+_N_CLASS_MIN = 64       # smallest canonical node count
+_IN_WIDTH_MIN = 4       # producer-list width floor
+_RELEASE_MIN = 4        # release-table width floor
+_AUTO_BUDGET = 4        # generations per miss batch
+_AUTO_BATCH = 4         # distinct graphs per refinement batch
+
+
+def _pow2(x: int, lo: int = 1) -> int:
+    return max(lo, 1 << max(0, x - 1).bit_length())
+
+
+def size_class(n: int) -> int:
+    """Canonical padded node count for an ``n``-node graph: the next
+    power of two (>= ``_N_CLASS_MIN``), so the whole registry lands in
+    a handful of compile classes."""
+    return _pow2(n, _N_CLASS_MIN)
+
+
+@dataclasses.dataclass(frozen=True)
+class PlacementRequest:
+    request_id: int
+    arch: str               # registry id or paper-workload name
+    shape: str              # configs.base.SHAPES key
+
+
+@dataclasses.dataclass
+class PlacementResult:
+    request_id: int
+    arch: str
+    shape: str
+    status: str                            # "ok" | "failed"
+    cache_hit: bool = False
+    graph_hash: Optional[str] = None
+    mapping: Optional[np.ndarray] = None   # (n, 2) int32 per-op tiers
+    speedup: float = 0.0                   # vs the heuristic compiler
+    latency_ms: float = 0.0
+    source: str = ""                       # "egrl" | "compiler" (ok only)
+    error: Optional[str] = None
+    wall_ms: float = 0.0                   # time-to-placement
+
+    @property
+    def ok(self) -> bool:
+        return self.status == "ok"
+
+
+class PlacementService:
+    """Persistent placement server; see the module docstring.
+
+    ``submit`` answers hits / extraction failures immediately and
+    queues misses; ``tick`` refines one batch of queued misses;
+    ``run`` drives a whole request stream (tick when ``batch_max``
+    distinct graphs are waiting, drain at the end)."""
+
+    def __init__(self, seed: int = 0, cache: Optional[str] = None,
+                 budget=None, batch=None, pop_size: int = 8,
+                 reward_scale: float = 5.0):
+        self.seed = int(seed)
+        self.cache_enabled = env_policy(
+            "REPRO_SERVE_CACHE", choices=("on", "off"), default="on",
+            override=cache) == "on"
+        b = env_policy("REPRO_SERVE_BUDGET", choices=("auto",),
+                       default="auto", override=budget, int_ok=True)
+        self.budget = _AUTO_BUDGET if b == "auto" else int(b)
+        m = env_policy("REPRO_SERVE_BATCH", choices=("auto",),
+                       default="auto", override=batch, int_ok=True)
+        self.batch_max = _AUTO_BATCH if m == "auto" else int(m)
+        self.pop_size = int(pop_size)
+        self.reward_scale = float(reward_scale)
+
+        self._cache: Dict[str, dict] = {}      # hash -> placement entry
+        # misses waiting for a refinement batch, in arrival order
+        self._queue: List[Tuple[PlacementRequest, WorkloadGraph,
+                                str, float]] = []
+        self._prior_vec: Optional[np.ndarray] = None
+        self.evaluator_calls = 0               # refinement batches run
+        self._counts = dict(served=0, hits=0, misses=0, failed=0, ticks=0)
+
+    # ------------------------------------------------------------ intake
+    def submit(self, req: PlacementRequest) -> Optional[PlacementResult]:
+        """Cache hits and extraction failures come back immediately;
+        misses enqueue and return ``None`` (answered by a later
+        ``tick``)."""
+        t0 = time.perf_counter()
+        try:
+            g = extract_for(req.arch, req.shape)
+            h = g.canonical_hash()
+        except Exception as e:  # unknown arch/shape, malformed graph
+            return self._result(
+                req, None, {"error": f"{type(e).__name__}: {e}"}, t0)
+        if self.cache_enabled and h in self._cache:
+            # the hit path never builds a batch, never runs a driver
+            self._counts["hits"] += 1
+            return self._result(req, h, self._cache[h], t0, cache_hit=True)
+        self._counts["misses"] += 1
+        self._queue.append((req, g, h, t0))
+        return None
+
+    # ------------------------------------------------------- refinement
+    def tick(self) -> List[PlacementResult]:
+        """Refine up to ``batch_max`` distinct queued graphs and answer
+        every queued request they cover (duplicates included).  Always
+        answers at least the oldest queued request, so repeated ticks
+        drain the queue."""
+        if not self._queue:
+            return []
+        self._counts["ticks"] += 1
+        todo: Dict[str, WorkloadGraph] = {}
+        for _, g, h, _ in self._queue:
+            if h not in todo and len(todo) < self.batch_max:
+                todo[h] = g
+        refined = self._refine(todo)
+        out, keep = [], []
+        for req, g, h, t0 in self._queue:
+            entry = refined.get(h)
+            if entry is None and self.cache_enabled:
+                entry = self._cache.get(h)
+            if entry is None:
+                keep.append((req, g, h, t0))
+                continue
+            out.append(self._result(req, h, entry, t0))
+        self._queue = keep
+        return out
+
+    def _refine(self, todo: Dict[str, WorkloadGraph]) -> Dict[str, dict]:
+        """Refine the distinct graphs in ``todo``, grouped by size
+        class; a failing class batch is retried one graph at a time so
+        only the poisoned graph fails.  Successes are cached, failures
+        are not (a retry gets a fresh attempt)."""
+        out: Dict[str, dict] = {}
+        classes: Dict[int, List[Tuple[str, WorkloadGraph]]] = {}
+        for h, g in sorted(todo.items()):      # hash order: arrival-
+            classes.setdefault(size_class(g.n), []).append((h, g))
+        #                                        order independence
+        for n_class, items in sorted(classes.items()):
+            try:
+                out.update(self._refine_class(n_class, items))
+            except Exception as e:
+                if len(items) == 1:
+                    h = items[0][0]
+                    out[h] = {"error": f"{type(e).__name__}: {e}"}
+                    continue
+                for h, g in items:             # isolate the bad graph
+                    try:
+                        out.update(self._refine_class(n_class, [(h, g)]))
+                    except Exception as e1:
+                        out[h] = {"error": f"{type(e1).__name__}: {e1}"}
+        if self.cache_enabled:
+            for h, entry in out.items():
+                if "error" not in entry:
+                    self._cache[h] = entry
+        return out
+
+    def _refine_class(self, n_class: int,
+                      items: List[Tuple[str, WorkloadGraph]]) -> Dict[str, dict]:
+        """One short warm-started EGRL refinement over a canonical-grid
+        batch; returns {hash: placement entry} for every item."""
+        hashes = [h for h, _ in items]
+        graphs = [g for _, g in items]
+        # canonical geometry: always batch_max graph slots (cyclic
+        # fill; filler results are discarded), pow2 widths, normalized
+        # slot names -> one jit executable per (class, fan, release)
+        filled = [graphs[i % len(graphs)] for i in range(self.batch_max)]
+        arrs = [g.arrays() for g in filled]
+        fan = max(1, max((len(p) for a in arrs for p in a["producers_of"]),
+                         default=0))
+        # bincount of last_consumer bounds the release-table multiplicity
+        rel = max(int(np.bincount(
+            a["last_consumer"].astype(np.int64), minlength=1).max())
+            for a in arrs)
+        batch = build_graph_batch(
+            [dataclasses.replace(g, name=f"slot{i}")
+             for i, g in enumerate(filled)],
+            n_max=n_class, w_max=n_class,
+            in_width=_pow2(fan, _IN_WIDTH_MIN),
+            release_width=_pow2(rel, _RELEASE_MIN))
+        cfg = EGRLConfig(pop_size=self.pop_size,
+                         seed=self._batch_seed(hashes),
+                         reward_scale=self.reward_scale)
+        drv = ZooEGRL(filled, cfg, mode="ea", zoo=batch)
+        if self._prior_vec is not None:
+            drv.warm_start(self._prior_vec)
+        self.evaluator_calls += 1
+        for _ in range(self.budget):
+            drv.generation()
+        self._prior_vec = drv.best_gnn_vec()   # continual warm start
+        out = {}
+        for i, (h, g) in enumerate(items):     # slots >= len(items) are
+            sp = float(drv.best_reward[i]) / self.reward_scale  # fillers
+            ref_ms = float(batch.ref_latency[i]) * 1e3
+            if sp > 1.0:   # valid AND beats the heuristic compiler
+                out[h] = {
+                    "mapping": np.asarray(drv.best_mapping[i], np.int32),
+                    "speedup": sp, "latency_ms": ref_ms / sp,
+                    "ref_latency_ms": ref_ms, "source": "egrl",
+                }
+            else:
+                # never-worse-than-compiler guarantee: a short budget
+                # (or an unlucky batch) must not serve an invalid or
+                # slower placement — fall back to the always-valid
+                # heuristic reference mapping (speedup 1.0)
+                cmap, _ = compiler_reference(g)
+                out[h] = {
+                    "mapping": np.asarray(cmap, np.int32),
+                    "speedup": 1.0, "latency_ms": ref_ms,
+                    "ref_latency_ms": ref_ms, "source": "compiler",
+                }
+        return out
+
+    def _batch_seed(self, hashes: List[str]) -> int:
+        """Content-derived refinement seed: sorted member hashes folded
+        with the service seed, so a batch's trajectory is a function of
+        WHAT it contains, not when or in which order it arrived."""
+        m = hashlib.sha256()
+        for h in sorted(hashes):
+            m.update(h.encode())
+            m.update(b",")
+        m.update(str(self.seed).encode())
+        return int.from_bytes(m.digest()[:4], "little")
+
+    # ---------------------------------------------------------- results
+    def _result(self, req: PlacementRequest, h: Optional[str],
+                entry: dict, t0: float,
+                cache_hit: bool = False) -> PlacementResult:
+        wall = (time.perf_counter() - t0) * 1e3
+        self._counts["served"] += 1
+        if "error" in entry:
+            self._counts["failed"] += 1
+            return PlacementResult(
+                request_id=req.request_id, arch=req.arch, shape=req.shape,
+                status="failed", cache_hit=cache_hit, graph_hash=h,
+                error=entry["error"], wall_ms=wall)
+        return PlacementResult(
+            request_id=req.request_id, arch=req.arch, shape=req.shape,
+            status="ok", cache_hit=cache_hit, graph_hash=h,
+            mapping=entry["mapping"].copy(), speedup=entry["speedup"],
+            latency_ms=entry["latency_ms"],
+            source=entry.get("source", ""), wall_ms=wall)
+
+    # ----------------------------------------------------------- driving
+    def _distinct_queued(self) -> int:
+        return len({h for _, _, h, _ in self._queue})
+
+    def run(self, requests: Iterable[PlacementRequest]
+            ) -> List[PlacementResult]:
+        """Drive a request stream: submit each request, tick whenever
+        ``batch_max`` distinct graphs are waiting, drain at the end.
+        Results come back in completion order (sort by ``request_id``
+        for a per-request view)."""
+        out = []
+        for req in requests:
+            r = self.submit(req)
+            if r is not None:
+                out.append(r)
+            while self._distinct_queued() >= self.batch_max:
+                out.extend(self.tick())
+        out.extend(self.run_until_drained())
+        return out
+
+    def run_until_drained(self, max_ticks: int = 1000
+                          ) -> List[PlacementResult]:
+        out = []
+        ticks = 0
+        while self._queue:
+            ticks += 1
+            assert ticks <= max_ticks, "placement queue is not draining"
+            got = self.tick()
+            assert got, "tick answered nothing with a non-empty queue"
+            out.extend(got)
+        return out
+
+    def stats(self) -> dict:
+        c = dict(self._counts)
+        c.update(queued=len(self._queue), cache_size=len(self._cache),
+                 evaluator_calls=self.evaluator_calls,
+                 hit_rate=c["hits"] / max(c["served"], 1))
+        return c

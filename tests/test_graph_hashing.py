@@ -1,0 +1,156 @@
+"""Canonical WorkloadGraph hashing (graphs/hashing.py): the placement
+cache key must be invariant to how a graph was BUILT (node insertion
+order / id relabeling) and sensitive to everything the memory simulator
+can OBSERVE (payload fields, edges, ring width)."""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.graphs.graph import Node, OP_TYPES, WorkloadGraph
+from repro.graphs.hashing import canonical_form, canonical_hash
+
+
+def _random_dag(seed: int, n_lo: int = 5, n_hi: int = 24) -> WorkloadGraph:
+    """Random topo-ordered DAG with UNIQUE node payloads (distinct
+    weight_bytes), so it has no non-trivial automorphisms and every
+    structural perturbation must change the canonical form."""
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(n_lo, n_hi + 1))
+    nodes = [Node(op=OP_TYPES[int(rng.integers(len(OP_TYPES)))],
+                  weight_bytes=float((i + 1) * 1024 + rng.integers(512)),
+                  ofm=(1, 1, int(rng.integers(1, 64))),
+                  flops=float(rng.integers(1, 10**6)))
+             for i in range(n)]
+    edges = []
+    for d in range(1, n):
+        for s in rng.choice(d, size=min(d, int(rng.integers(1, 3))),
+                            replace=False):
+            edges.append((int(s), d))
+    return WorkloadGraph("rand", nodes, sorted(set(edges)))
+
+
+def _random_relabel(g: WorkloadGraph, seed: int) -> WorkloadGraph:
+    """The same DAG rebuilt under a random linear extension of its
+    partial order — a topologically valid relabeling, i.e. a different
+    node INSERTION order for identical structure."""
+    rng = np.random.default_rng(seed)
+    preds = [[] for _ in range(g.n)]
+    succs = [[] for _ in range(g.n)]
+    for s, d in g.edges:
+        preds[d].append(s)
+        succs[s].append(d)
+    indeg = [len(p) for p in preds]
+    ready = [i for i in range(g.n) if indeg[i] == 0]
+    order = []
+    while ready:
+        i = ready.pop(int(rng.integers(len(ready))))
+        order.append(i)
+        for s in succs[i]:
+            indeg[s] -= 1
+            if indeg[s] == 0:
+                ready.append(s)
+    assert len(order) == g.n
+    inv = [0] * g.n
+    for new, old in enumerate(order):
+        inv[old] = new
+    out = WorkloadGraph(g.name, [g.nodes[i] for i in order],
+                        sorted((inv[s], inv[d]) for s, d in g.edges))
+    out.validate()
+    return out
+
+
+# ---------------------------------------------------------- invariance
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(0, 2**31 - 1))
+def test_hash_invariant_under_relabeling(seed, relabel_seed):
+    """Property: any topologically equivalent rebuild of a graph —
+    different node ids, different insertion order — hashes identically
+    (same placement-cache slot)."""
+    g = _random_dag(seed)
+    g2 = _random_relabel(g, relabel_seed)
+    assert canonical_hash(g) == canonical_hash(g2)
+    assert canonical_form(g) == canonical_form(g2)
+
+
+def test_hash_deterministic_across_builds():
+    """The same (arch, shape) extracted twice — two fully independent
+    graph builds — hashes identically, and distinct (arch, shape)
+    pairs all differ (the cache key discriminates the catalog)."""
+    from repro.graphs.extract import extract_for
+    pairs = [("qwen3-0.6b", "decode_32k"), ("qwen3-0.6b", "prefill_32k"),
+             ("mamba2-780m", "decode_32k")]
+    hashes = [canonical_hash(extract_for(a, s)) for a, s in pairs]
+    rebuilt = [canonical_hash(extract_for(a, s)) for a, s in pairs]
+    assert hashes == rebuilt
+    assert len(set(hashes)) == len(pairs)
+
+
+# --------------------------------------------------------- sensitivity
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1),
+       st.sampled_from(["weight", "ofm", "flops", "op", "frac"]))
+def test_hash_changes_on_payload_perturbation(seed, field):
+    """Property: perturbing ANY simulator-visible payload field of one
+    node changes the hash."""
+    g = _random_dag(seed)
+    rng = np.random.default_rng(seed + 1)
+    i = int(rng.integers(g.n))
+    nd = g.nodes[i]
+    if field == "weight":
+        nd2 = dataclasses.replace(nd, weight_bytes=nd.weight_bytes + 1.0)
+    elif field == "ofm":
+        nd2 = dataclasses.replace(nd, ofm=(1, 1, nd.ofm[2] + 1))
+    elif field == "flops":
+        nd2 = dataclasses.replace(nd, flops=nd.flops + 1.0)
+    elif field == "op":
+        other = OP_TYPES[(OP_TYPES.index(nd.op) + 1) % len(OP_TYPES)]
+        nd2 = dataclasses.replace(nd, op=other)
+    else:
+        nd2 = dataclasses.replace(nd, weight_access_frac=0.5)
+    g2 = WorkloadGraph(g.name, list(g.nodes), list(g.edges))
+    g2.nodes[i] = nd2
+    assert canonical_hash(g) != canonical_hash(g2)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.booleans())
+def test_hash_changes_on_edge_perturbation(seed, remove):
+    """Property: adding or removing one edge changes the hash (node
+    payloads are unique, so no edge change can be an automorphism)."""
+    g = _random_dag(seed)
+    rng = np.random.default_rng(seed + 2)
+    edges = list(g.edges)
+    if remove and len(edges) > 1:
+        del edges[int(rng.integers(len(edges)))]
+    else:
+        candidates = [(s, d) for s in range(g.n) for d in range(s + 1, g.n)
+                      if (s, d) not in g.edges]
+        if not candidates:
+            return                      # complete DAG: nothing to add
+        edges.append(candidates[int(rng.integers(len(candidates)))])
+    g2 = WorkloadGraph(g.name, list(g.nodes), sorted(edges))
+    g2.validate()
+    assert canonical_hash(g) != canonical_hash(g2)
+
+
+def test_hash_changes_on_ring_width_perturbation():
+    """A lifetime-extending skip edge widens the release ring; the
+    canonical form pins the ring width explicitly and the hash moves."""
+    n = 12
+    nodes = [Node(op="fc", weight_bytes=float((i + 1) * 1024))
+             for i in range(n)]
+    chain = [(i, i + 1) for i in range(n - 1)]
+    g = WorkloadGraph("chain", nodes, chain)
+    g2 = WorkloadGraph("chain", list(nodes), sorted(chain + [(0, n - 1)]))
+    assert g.ring_width() != g2.ring_width()
+    assert canonical_form(g)[2] != canonical_form(g2)[2]
+    assert canonical_hash(g) != canonical_hash(g2)
+
+
+def test_graph_method_delegates():
+    g = _random_dag(7)
+    assert g.canonical_hash() == canonical_hash(g)
+    assert len(g.canonical_hash()) == 64       # sha256 hex

@@ -1,0 +1,207 @@
+"""Placement service (serving/placement_service.py): end-to-end serve
+determinism, cache hits bypassing the evaluator, fault isolation (the
+queue never wedges), warm-started refinement, and the env knobs.
+
+Speed discipline: every test keeps its workloads in ONE canonical size
+class (256: the small registry archs) with the default batch/pop
+geometry, so the module-level jitted programs of core/egrl.py compile
+once for the whole module and every later service instance reuses them.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.serving.placement_service import (PlacementRequest,
+                                             PlacementService, size_class)
+
+# all class-256 registry archs (n in [142, 242])
+ARCHS = ["qwen3-0.6b", "mamba2-780m", "zamba2-1.2b", "granite-3-8b"]
+SHAPES = ["decode_32k", "prefill_32k"]
+
+
+def _stream(n=10, seed=0):
+    rng = np.random.default_rng(seed)
+    return [PlacementRequest(i, ARCHS[rng.integers(len(ARCHS))],
+                             SHAPES[rng.integers(len(SHAPES))])
+            for i in range(n)]
+
+
+def test_size_class_grid():
+    assert size_class(1) == 64
+    assert size_class(64) == 64
+    assert size_class(65) == 128
+    assert size_class(142) == 256
+    assert size_class(632) == 1024
+
+
+def test_serve_determinism_across_instances():
+    """Same seeded stream through two FRESH services: bit-identical
+    placements, identical hit/miss + status sequences, identical
+    completion order."""
+    reqs = _stream(10, seed=0)
+    res_a = PlacementService(seed=0).run(reqs)
+    res_b = PlacementService(seed=0).run(reqs)
+    assert [r.request_id for r in res_a] == [r.request_id for r in res_b]
+    assert [(r.status, r.cache_hit) for r in res_a] == \
+           [(r.status, r.cache_hit) for r in res_b]
+    for a, b in zip(res_a, res_b):
+        assert a.graph_hash == b.graph_hash
+        assert a.source == b.source
+        assert a.speedup == b.speedup
+        assert np.array_equal(a.mapping, b.mapping)
+    # every request answered exactly once, never an invalid placement
+    assert sorted(r.request_id for r in res_a) == list(range(len(reqs)))
+    assert all(r.ok and r.speedup >= 1.0 for r in res_a)
+
+
+def test_cache_hit_skips_evaluator():
+    """A repeat of an already-served (arch, shape) is answered AT
+    SUBMIT, from cache, without building a batch or running a driver —
+    asserted by poisoning the refinement path after the first serve."""
+    svc = PlacementService(seed=0)
+    [first] = svc.run([PlacementRequest(0, "qwen3-0.6b", "decode_32k")])
+    assert first.ok and not first.cache_hit
+    calls = svc.evaluator_calls
+    assert calls >= 1
+
+    def boom(*a, **k):                  # any refinement attempt raises
+        raise AssertionError("cache hit must not reach the evaluator")
+
+    svc._refine_class = boom
+    hit = svc.submit(PlacementRequest(1, "qwen3-0.6b", "decode_32k"))
+    assert hit is not None, "hits are answered at submit time"
+    assert hit.ok and hit.cache_hit
+    assert hit.graph_hash == first.graph_hash
+    assert np.array_equal(hit.mapping, first.mapping)
+    assert hit.speedup == first.speedup
+    assert svc.evaluator_calls == calls
+    assert svc.stats()["queued"] == 0
+
+
+def test_cache_distinguishes_shapes():
+    """decode vs prefill of the same arch are different graphs —
+    different hashes, no false cache hit."""
+    svc = PlacementService(seed=0)
+    res = svc.run([PlacementRequest(0, "qwen3-0.6b", "decode_32k"),
+                   PlacementRequest(1, "qwen3-0.6b", "prefill_32k")])
+    assert len({r.graph_hash for r in res}) == 2
+    assert not any(r.cache_hit for r in res)
+
+
+def test_fault_extraction_failures():
+    """Unknown arch / unsupported shape fail that one request
+    immediately with the error attached; the service keeps serving."""
+    svc = PlacementService(seed=0)
+    bad_arch = svc.submit(PlacementRequest(0, "no-such-arch", "decode_32k"))
+    assert bad_arch is not None and not bad_arch.ok
+    assert "unknown arch" in bad_arch.error
+    # long_500k is SSM/hybrid-only: a dense arch must fail loud
+    bad_shape = svc.submit(PlacementRequest(1, "qwen3-0.6b", "long_500k"))
+    assert bad_shape is not None and not bad_shape.ok
+    assert "long_500k" in bad_shape.error
+    assert svc.stats()["queued"] == 0   # failures never enqueue
+    res = svc.run([PlacementRequest(2, "qwen3-0.6b", "decode_32k")])
+    assert len(res) == 1 and res[0].ok
+
+
+def test_fault_midbatch_isolates_poisoned_graph():
+    """An evaluator exception over a batch re-runs the class one graph
+    at a time: the poisoned graph fails alone (error attached, not
+    cached), the rest of the batch is served, the queue drains, and
+    later requests still work."""
+    svc = PlacementService(seed=0)
+    good = PlacementRequest(0, "qwen3-0.6b", "decode_32k")
+    poisoned = PlacementRequest(1, "mamba2-780m", "decode_32k")
+    assert svc.submit(good) is None
+    assert svc.submit(poisoned) is None
+    from repro.graphs.extract import extract_for
+    bad_hash = extract_for("mamba2-780m", "decode_32k").canonical_hash()
+
+    orig = svc._refine_class
+
+    def flaky(n_class, items):
+        if any(h == bad_hash for h, _ in items):
+            raise RuntimeError("simulated evaluator crash")
+        return orig(n_class, items)
+
+    svc._refine_class = flaky
+    res = {r.request_id: r for r in svc.run_until_drained()}
+    assert svc.stats()["queued"] == 0
+    assert res[0].ok and not res[0].cache_hit
+    assert not res[1].ok
+    assert "simulated evaluator crash" in res[1].error
+    assert bad_hash not in svc._cache   # failures are not cached
+
+    # the service is not wedged: the good graph now hits, the poisoned
+    # one retries (and succeeds once the fault clears)
+    svc._refine_class = orig
+    after = svc.run([PlacementRequest(2, "qwen3-0.6b", "decode_32k"),
+                     PlacementRequest(3, "mamba2-780m", "decode_32k")])
+    after = {r.request_id: r for r in after}
+    assert after[2].ok and after[2].cache_hit
+    assert after[3].ok and not after[3].cache_hit
+
+
+def test_warm_start_not_worse_than_cold():
+    """Warm-start regression: at a fixed budget, a GNN-prior-seeded
+    population reaches per-graph fitness >= the random init on at
+    least one extracted workload (seeded, tolerance-based).  Also pins
+    the seeding contract: row 0 IS the prior."""
+    from repro.core.egrl import EGRLConfig, ZooEGRL
+    from repro.graphs.batch import build_graph_batch
+    from repro.graphs.extract import extract_for
+    import dataclasses as dc
+
+    graphs = [extract_for("qwen3-0.6b", "decode_32k"),
+              extract_for("mamba2-780m", "decode_32k")]
+    # the service's canonical geometry (class 256), so this test shares
+    # the module's compiled programs
+    filled = [graphs[i % 2] for i in range(4)]
+    batch = build_graph_batch(
+        [dc.replace(g, name=f"slot{i}") for i, g in enumerate(filled)],
+        n_max=256, w_max=256, in_width=4, release_width=4)
+    budget = 3
+    cold = ZooEGRL(filled, EGRLConfig(pop_size=8, seed=0), mode="ea",
+                   zoo=batch)
+    for _ in range(budget):
+        cold.generation()
+    vec = cold.best_gnn_vec()
+
+    warm = ZooEGRL(filled, EGRLConfig(pop_size=8, seed=1), mode="ea",
+                   zoo=batch)
+    warm.warm_start(vec)
+    assert np.array_equal(np.asarray(warm.gnn_pop[0]), vec)
+    for _ in range(budget):
+        warm.generation()
+    tol = 1e-6
+    assert any(warm.best_reward[i] >= cold.best_reward[i] - tol
+               for i in range(len(filled))), \
+        (warm.best_reward, cold.best_reward)
+    assert warm.best_fitness >= -np.inf  # trained, tracked
+
+
+def test_env_knobs_fail_loud(monkeypatch):
+    monkeypatch.setenv("REPRO_SERVE_CACHE", "sometimes")
+    with pytest.raises(ValueError, match="REPRO_SERVE_CACHE"):
+        PlacementService()
+    monkeypatch.delenv("REPRO_SERVE_CACHE")
+    monkeypatch.setenv("REPRO_SERVE_BUDGET", "-3")
+    with pytest.raises(ValueError, match="REPRO_SERVE_BUDGET"):
+        PlacementService()
+    monkeypatch.delenv("REPRO_SERVE_BUDGET")
+    monkeypatch.setenv("REPRO_SERVE_BATCH", "many")
+    with pytest.raises(ValueError, match="REPRO_SERVE_BATCH"):
+        PlacementService()
+    monkeypatch.delenv("REPRO_SERVE_BATCH")
+    svc = PlacementService(budget=1, batch=2, cache="off")
+    assert svc.budget == 1 and svc.batch_max == 2
+    assert not svc.cache_enabled
+
+
+def test_cache_off_always_refines():
+    svc = PlacementService(seed=0, cache="off", budget=1)
+    res = svc.run([PlacementRequest(0, "qwen3-0.6b", "decode_32k"),
+                   PlacementRequest(1, "qwen3-0.6b", "decode_32k")])
+    assert all(r.ok and not r.cache_hit for r in res)
+    assert svc.stats()["cache_size"] == 0

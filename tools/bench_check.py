@@ -194,6 +194,43 @@ def check(data: dict) -> list:
                         _require(errors, f"gat.shapes.{name}.{label}", t,
                                  "fwd_bwd_us")
 
+    # ---- serve: placement-service SLOs — stream shape, hit/miss
+    # percentiles, throughput.  Shape + internal consistency only: the
+    # one timing RELATION gated (hit p50 <= miss p50) is structural —
+    # a cache hit skips refinement entirely, so if it does not hold the
+    # split itself is mislabeled — never an absolute timing bound.
+    srv = data.get("serve")
+    if not isinstance(srv, dict):
+        _fail(errors, "missing section 'serve'")
+    else:
+        _require(errors, "serve", srv, "requests")
+        _require(errors, "serve", srv, "archs")
+        _require(errors, "serve", srv, "budget")
+        _require(errors, "serve", srv, "cache_hits")
+        _require(errors, "serve", srv, "cache_misses")
+        _require(errors, "serve", srv, "placements_per_sec")
+        _require(errors, "serve", srv, "evaluator_calls")
+        hit_rate = srv.get("hit_rate")
+        if not (isinstance(hit_rate, (int, float))
+                and not isinstance(hit_rate, bool)
+                and math.isfinite(hit_rate) and 0.0 < hit_rate < 1.0):
+            _fail(errors, f"serve.hit_rate: expected a fraction in (0, 1) "
+                          f"(the stream must exercise BOTH paths), got "
+                          f"{hit_rate!r}")
+        pcts = {}
+        for key in ("hit_p50_ms", "hit_p99_ms", "miss_p50_ms",
+                    "miss_p99_ms"):
+            pcts[key] = _require(errors, "serve", srv, key)
+        if all(isinstance(v, (int, float)) for v in pcts.values()):
+            if pcts["hit_p50_ms"] > pcts["miss_p50_ms"]:
+                _fail(errors, f"serve: hit p50 ({pcts['hit_p50_ms']} ms) "
+                              f"exceeds miss p50 ({pcts['miss_p50_ms']} ms) "
+                              f"— hits must not pay the refinement path")
+        failed = srv.get("failed")
+        if failed not in (0,):
+            _fail(errors, f"serve.failed: the synthetic catalog must serve "
+                          f"cleanly, got {failed!r}")
+
     # ---- pop_sharding: one row per benched mesh size
     pop = data.get("pop_sharding")
     if not isinstance(pop, dict):
@@ -236,7 +273,8 @@ def main(argv=None) -> int:
             print(f"  - {e}", file=sys.stderr)
         return 1
     print(f"bench-check OK: {path} has all expected sections "
-          f"(rectify, zoo_eval, generation[+zoo_sac], gat, pop_sharding)")
+          f"(rectify, zoo_eval, generation[+zoo_sac], gat, pop_sharding, "
+          f"serve)")
     return 0
 
 
