@@ -1,5 +1,5 @@
 # Convenience targets; see ROADMAP.md for the tier-1 verify command.
-.PHONY: test smoke bench bench-zoo bench-gat bench-serve bench-check docs-check
+.PHONY: test smoke bench bench-zoo bench-gat bench-serve bench-check docs-check obs-report
 
 test:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python -m pytest -x -q
@@ -39,3 +39,18 @@ bench-check:
 # docs/architecture.md
 docs-check:
 	python tools/docs_check.py
+
+# flight-recorder end-to-end: run the serve bench with the JSONL trace
+# sink on (reduced budget, temp BENCH_JSON so the tracked trajectory
+# file is untouched), then gate + render the trace with trace_report
+# (non-empty tree, zero error spans, child-sum <= parent, full serve
+# span taxonomy).  Leaves serve_trace.jsonl behind for inspection.
+obs-report:
+	rm -f serve_trace.jsonl
+	TMP_JSON=$$(mktemp) && \
+	  REPRO_OBS=jsonl REPRO_OBS_PATH=serve_trace.jsonl \
+	  BENCH_JSON=$$TMP_JSON BENCH_STEPS=50 \
+	  PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} \
+	  python benchmarks/run.py serve && \
+	  rm -f $$TMP_JSON
+	python tools/trace_report.py serve_trace.jsonl --gate

@@ -369,15 +369,56 @@ def bench_pop_sharding() -> None:
     _update_json("pop_sharding", payload)
 
 
+def _obs_overhead(svc, results, reps: int = 25) -> dict:
+    """Hit-path tracing tax: replay one cached (arch, shape) through the
+    warmed service ``reps`` times each with tracing off and with the
+    full jsonl sink on (alternating, so drift hits both arms), and
+    report the p50 pair + relative overhead.  bench_check gates
+    ``overhead_frac`` structurally (< 0.2), never the absolute times."""
+    import tempfile
+
+    import numpy as np
+
+    from repro import obs
+    from repro.serving.placement_service import PlacementRequest
+
+    hit = next(r for r in results if r.ok)
+    on, off = [], []
+    fd, tmp = tempfile.mkstemp(suffix=".jsonl")
+    os.close(fd)
+    try:
+        rid = 10 ** 6                      # clear of the stream's ids
+        for _ in range(reps):
+            for bucket, kw in ((off, {"mode": "off"}),
+                               (on, {"mode": "jsonl", "path": tmp})):
+                with obs.override(**kw):
+                    t0 = time.perf_counter()
+                    r = svc.submit(PlacementRequest(rid, hit.arch, hit.shape))
+                    bucket.append((time.perf_counter() - t0) * 1e3)
+                assert r is not None and r.cache_hit, \
+                    "overhead probe must stay on the cache-hit path"
+                rid += 1
+    finally:
+        os.unlink(tmp)
+    p50_on = float(np.percentile(on, 50))
+    p50_off = float(np.percentile(off, 50))
+    return {"hit_p50_obs_on_ms": round(p50_on, 4),
+            "hit_p50_obs_off_ms": round(p50_off, 4),
+            "overhead_frac": round(p50_on / max(p50_off, 1e-9) - 1.0, 4),
+            "reps": reps, "mode_on": "jsonl"}
+
+
 def bench_serve() -> None:
     """Serving gate: placement-as-a-service SLOs over a seeded synthetic
     request stream (launch/serve_placements.py) — p50/p99
     time-to-placement split by cache hit/miss, placements/sec, cache
-    hit rate, and placement quality.  Writes the ``serve`` section of
-    BENCH_inner_loop.json; tools/bench_check.py gates its SHAPE (and
-    the hit-p50 <= miss-p50 relation), never absolute timings.  The
-    smoke budget (BENCH_STEPS < 200) trims the stream and pins the
-    catalog to one canonical size class so the run stays in seconds."""
+    hit rate, placement quality, and the hit-path tracing overhead
+    (obs on vs off on the warmed service).  Writes the ``serve``
+    section of BENCH_inner_loop.json; tools/bench_check.py gates its
+    SHAPE (and the hit-p50 <= miss-p50 relation plus the obs-overhead
+    bound), never absolute timings.  The smoke budget
+    (BENCH_STEPS < 200) trims the stream and pins the catalog to one
+    canonical size class so the run stays in seconds."""
     from repro.launch.serve_placements import serve, synthetic_stream
 
     if STEPS >= 200:
@@ -387,9 +428,10 @@ def bench_serve() -> None:
         archs = ["qwen3-0.6b", "mamba2-780m", "zamba2-1.2b",
                  "granite-3-8b", "qwen2.5-14b"]
     reqs = synthetic_stream(n_req, seed=0, archs=archs)
-    results, summary = serve(reqs, seed=0, log=None)
+    results, summary, svc = serve(reqs, seed=0, log=None)
     assert len({r.arch for r in reqs}) >= 5, "stream must span >=5 archs"
     assert summary["failed"] == 0, "synthetic catalog must serve cleanly"
+    summary["obs_overhead"] = _obs_overhead(svc, results)
 
     print(f"serve_requests,{summary['requests']},"
           f"archs{summary['archs']}_budget{summary['budget']}")
@@ -403,6 +445,9 @@ def bench_serve() -> None:
           f"placements_per_sec")
     print(f"serve_mean_speedup,{summary['mean_speedup']},"
           f"egrl_frac_{summary['egrl_frac']}")
+    ov = summary["obs_overhead"]
+    print(f"serve_obs_overhead,{ov['overhead_frac']},"
+          f"hit_p50_on{ov['hit_p50_obs_on_ms']}_off{ov['hit_p50_obs_off_ms']}")
     _update_json("serve", summary)
 
 

@@ -69,6 +69,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core import boltzmann as bz
 from repro.core import ea as ea_mod
 from repro.core import gnn
@@ -151,6 +152,27 @@ def _bz_sample_pop(keys, pops):
     return jax.vmap(lambda k, f: bz.sample(k, bz.from_flat(f, n)))(keys, pops)
 
 
+def _compile_tracked(fn, what, **attrs):
+    """Compile-vs-execute attribution: jax traces AND compiles
+    synchronously inside a jitted callable's first call, so wrapping
+    that first call in a distinct ``jit_compile`` span (config as
+    attributes) splits first-compile time out of the surrounding
+    execute span without any added sync.  Later calls pass through on a
+    single flag check.  Shared by ``_evolve_program`` (one flag per
+    cached config, so a recompile storm shows up as repeated
+    ``jit_compile`` spans) and the gat_tune dispatch."""
+    state = {"first": True}
+
+    def wrapper(*a, **kw):
+        if state["first"]:
+            state["first"] = False
+            with obs.span("jit_compile", what=what, **attrs):
+                return fn(*a, **kw)
+        return fn(*a, **kw)
+
+    return wrapper
+
+
 @lru_cache(maxsize=None)
 def _evolve_program(n_g, n_g_pad, n_b, n_b_pad, n_nodes, e_g, e_b,
                     tournament_k, crossover_prob, mut_prob, mut_frac,
@@ -164,8 +186,11 @@ def _evolve_program(n_g, n_g_pad, n_b, n_b_pad, n_nodes, e_g, e_b,
                    n_g=n_g, n_b=n_b, tournament_k=tournament_k,
                    crossover_prob=crossover_prob, mut_prob=mut_prob,
                    mut_frac=mut_frac, mut_std=mut_std)
-    return jax.jit(partial(_evolve_with_fitness_mask, base,
-                           n_g, n_g_pad, n_b, n_b_pad))
+    return _compile_tracked(
+        jax.jit(partial(_evolve_with_fitness_mask, base,
+                        n_g, n_g_pad, n_b, n_b_pad)),
+        "evolve_program", n_g=n_g, n_b=n_b, n_nodes=n_nodes,
+        tournament_k=tournament_k)
 
 
 class _EvoPopulation:
@@ -356,6 +381,17 @@ class EGRL(_EvoPopulation):
 
     # --------------------------------------------------------- generation
     def generation(self) -> Dict:
+        # span timing note: jax dispatch is async, so the rollout /
+        # evolve child spans measure DISPATCH (+ compile on a first
+        # call, split out as jit_compile by _compile_tracked); the
+        # device wait lands in host_sync — the generation loop's one
+        # host sync, unchanged by instrumentation.
+        with obs.profile_block(), \
+                obs.span("generation", driver="egrl",
+                         mode=self.mode) as sp:
+            return self._generation(sp)
+
+    def _generation(self, sp) -> Dict:
         cfg = self.cfg
         n_g, n_b = self.n_g, self.n_b
 
@@ -373,31 +409,38 @@ class EGRL(_EvoPopulation):
         real = {"g": n_g, "b": n_b}
         logits_g = None
         if n_g:
-            logits_g = self._pop_gnn_logits(self.gnn_pop)
-            # keys are split with the REAL count (split(k, n) has no
-            # prefix property) and repeated into the padding rows
-            parts["g"] = self._pop_sample(_pad_keys(
-                jax.random.split(self._k(), n_g), self.n_g_pad), logits_g)
+            with obs.span("rollout.gnn", rows=n_g):
+                logits_g = self._pop_gnn_logits(self.gnn_pop)
+                # keys are split with the REAL count (split(k, n) has
+                # no prefix property) and repeated into the padding rows
+                parts["g"] = self._pop_sample(_pad_keys(
+                    jax.random.split(self._k(), n_g), self.n_g_pad),
+                    logits_g)
         if n_b:
-            parts["b"] = self._pop_boltz(_pad_keys(
-                jax.random.split(self._k(), n_b), self.n_b_pad), self.bz_pop)
+            with obs.span("rollout.boltzmann", rows=n_b):
+                parts["b"] = self._pop_boltz(_pad_keys(
+                    jax.random.split(self._k(), n_b), self.n_b_pad),
+                    self.bz_pop)
         if self.mode != "ea":
-            parts["pg"] = self.learner.explore_actions(cfg.pg_rollouts)
-        for name, maps in parts.items():
-            results[name] = evaluate_population(
-                self.sg, maps, self.ref_latency, cfg.reward_scale)
+            with obs.span("rollout.pg", rows=cfg.pg_rollouts):
+                parts["pg"] = self.learner.explore_actions(cfg.pg_rollouts)
+        with obs.span("evaluate", parts=len(parts)):
+            for name, maps in parts.items():
+                results[name] = evaluate_population(
+                    self.sg, maps, self.ref_latency, cfg.reward_scale)
 
         # ---- EA step (Algorithm 2 lines 8-25), still on device
         if n_g or n_b:
-            empty = jnp.zeros((0,), jnp.float32)
-            self.gnn_pop, self.bz_pop = self._evolve(
-                self._k(),
-                self.gnn_pop,
-                results["g"]["reward"] if n_g else empty,
-                self.bz_pop,
-                results["b"]["reward"] if n_b else empty,
-                logits_g if logits_g is not None
-                else jnp.zeros((0, self.g.n, 2, 3)))
+            with obs.span("evolve"):
+                empty = jnp.zeros((0,), jnp.float32)
+                self.gnn_pop, self.bz_pop = self._evolve(
+                    self._k(),
+                    self.gnn_pop,
+                    results["g"]["reward"] if n_g else empty,
+                    self.bz_pop,
+                    results["b"]["reward"] if n_b else empty,
+                    logits_g if logits_g is not None
+                    else jnp.zeros((0, self.g.n, 2, 3)))
 
         # ---- the ONE host sync per generation: buffer + logging
         # (padding rows are sliced away — they never hit the buffer,
@@ -406,12 +449,14 @@ class EGRL(_EvoPopulation):
             a = np.asarray(x)
             return a[:real[name]] if name in real else a
 
-        rewards = np.concatenate(
-            [np_real(n, results[n]["reward"]) for n in parts])
-        maps_np = np.concatenate(
-            [np_real(n, m) for n, m in parts.items()])
-        valid = np.concatenate(
-            [np_real(n, results[n]["valid"]) for n in parts])
+        with obs.span("host_sync"):
+            per_part = {n: np_real(n, results[n]["reward"])
+                        for n in parts}
+            rewards = np.concatenate(list(per_part.values()))
+            maps_np = np.concatenate(
+                [np_real(n, m) for n, m in parts.items()])
+            valid = np.concatenate(
+                [np_real(n, results[n]["valid"]) for n in parts])
         self.steps += len(maps_np)
         self.buffer.add_batch(maps_np, rewards)
         gen_best = int(np.argmax(rewards))
@@ -429,8 +474,10 @@ class EGRL(_EvoPopulation):
             # always picked a child, never an elite).  When every GNN
             # slot is an elite (n_g == e_g) skip, preserving elitism.
             if self.mode == "egrl" and n_g > self.e_g:
+                obs.counter("egrl.migrations").inc()
                 self.gnn_pop = self._migrate(
                     self.gnn_pop, gnn.flatten_params(self.learner.actor))
+        obs.gauge("egrl.replay_occupancy").set(len(self.buffer))
 
         rec = {
             "steps": self.steps,
@@ -442,6 +489,13 @@ class EGRL(_EvoPopulation):
             "valid_frac": float(valid.mean()),
             **info,
         }
+        # per-member-type attribution from the host copies the loop
+        # already made — no extra device fetch
+        sp.set(steps=self.steps, gen_best=rec["gen_best_reward"],
+               gen_mean=rec["gen_mean_reward"], best=self.best_reward,
+               valid_frac=rec["valid_frac"],
+               **{f"best_{n}": float(v.max())
+                  for n, v in per_part.items() if v.size})
         self.history.append(rec)
         return rec
 
@@ -595,6 +649,13 @@ class ZooEGRL(_EvoPopulation):
         self.history: List[Dict] = []
 
     def generation(self) -> Dict:
+        # same dispatch-vs-sync span semantics as EGRL.generation
+        with obs.profile_block(), \
+                obs.span("generation", driver="zoo",
+                         mode=self.mode) as sp:
+            return self._generation(sp)
+
+    def _generation(self, sp) -> Dict:
         cfg = self.cfg
         n_g, n_b = self.n_g, self.n_b
         zoo = self.zoo
@@ -603,49 +664,60 @@ class ZooEGRL(_EvoPopulation):
         real = {"g": n_g, "b": n_b}
         logits_g = None
         if n_g:
-            logits_g = [f(self.gnn_pop) for f in self._pop_logits]
-            keys = _pad_keys(jax.random.split(self._k(), n_g), self.n_g_pad)
-            parts["g"] = tuple(
-                self._pop_sample(kc, lg) for kc, lg in
-                zip(bucket_keys_batch(keys, zoo.n_buckets), logits_g))
+            with obs.span("rollout.gnn", rows=n_g):
+                logits_g = [f(self.gnn_pop) for f in self._pop_logits]
+                keys = _pad_keys(jax.random.split(self._k(), n_g),
+                                 self.n_g_pad)
+                parts["g"] = tuple(
+                    self._pop_sample(kc, lg) for kc, lg in
+                    zip(bucket_keys_batch(keys, zoo.n_buckets), logits_g))
         if n_b:
-            parts["b"] = self._pop_boltz(_pad_keys(
-                jax.random.split(self._k(), n_b), self.n_b_pad), self.bz_pop)
+            with obs.span("rollout.boltzmann", rows=n_b):
+                parts["b"] = self._pop_boltz(_pad_keys(
+                    jax.random.split(self._k(), n_b), self.n_b_pad),
+                    self.bz_pop)
         if self.mode != "ea":
-            parts["pg"] = self.learner.explore_actions(cfg.pg_rollouts)
-        for name, maps in parts.items():
-            results[name] = evaluate_population_bucketed(
-                zoo, maps, cfg.reward_scale)   # (P_pad, G) zoo order
+            with obs.span("rollout.pg", rows=cfg.pg_rollouts):
+                parts["pg"] = self.learner.explore_actions(cfg.pg_rollouts)
+        with obs.span("evaluate", parts=len(parts),
+                      buckets=zoo.n_buckets):
+            for name, maps in parts.items():
+                results[name] = evaluate_population_bucketed(
+                    zoo, maps, cfg.reward_scale)   # (P_pad, G) zoo order
 
         # ---- EA step on the aggregate fitness, still on device
         empty = jnp.zeros((0,), jnp.float32)
         fit = {name: aggregate_rewards(results[name]["reward"], self.agg)
                for name in parts}
         if n_g or n_b:
-            self.gnn_pop, self.bz_pop = self._evolve(
-                self._k(),
-                self.gnn_pop, fit.get("g", empty),
-                self.bz_pop, fit.get("b", empty),
-                # Boltzmann-seeding grid: bucket-major (P, n_eff, 2, 3),
-                # matching the bz genome layout (flat reshape at K = 1)
-                jnp.concatenate([lg.reshape(self.n_g_pad, -1, 2, 3)
-                                 for lg in logits_g], axis=1)
-                if logits_g is not None
-                else jnp.zeros((0, self.n_eff, 2, 3)))
+            with obs.span("evolve"):
+                self.gnn_pop, self.bz_pop = self._evolve(
+                    self._k(),
+                    self.gnn_pop, fit.get("g", empty),
+                    self.bz_pop, fit.get("b", empty),
+                    # Boltzmann-seeding grid: bucket-major
+                    # (P, n_eff, 2, 3), matching the bz genome layout
+                    # (flat reshape at K = 1)
+                    jnp.concatenate([lg.reshape(self.n_g_pad, -1, 2, 3)
+                                     for lg in logits_g], axis=1)
+                    if logits_g is not None
+                    else jnp.zeros((0, self.n_eff, 2, 3)))
 
         # ---- the ONE host sync per generation
         def np_real(name, x):
             a = np.asarray(x)
             return a[:real[name]] if name in real else a
 
-        rewards = np.concatenate(    # (P, G) zoo order
-            [np_real(n, results[n]["reward"]) for n in parts])
-        fitness = np.concatenate([np_real(n, fit[n]) for n in parts])
-        valid = np.concatenate(
-            [np_real(n, results[n]["valid"]) for n in parts])
-        # per-bucket host copies of the rollout rows (real rows only)
-        maps_np = {name: [np_real(name, m) for m in bucket_maps]
-                   for name, bucket_maps in parts.items()}
+        with obs.span("host_sync"):
+            rewards = np.concatenate(    # (P, G) zoo order
+                [np_real(n, results[n]["reward"]) for n in parts])
+            per_part_fit = {n: np_real(n, fit[n]) for n in parts}
+            fitness = np.concatenate(list(per_part_fit.values()))
+            valid = np.concatenate(
+                [np_real(n, results[n]["valid"]) for n in parts])
+            # per-bucket host copies of the rollout rows (real rows only)
+            maps_np = {name: [np_real(name, m) for m in bucket_maps]
+                       for name, bucket_maps in parts.items()}
         self.steps += rewards.size          # one env step per (genome, graph)
         # per-graph action stacks in the SAME part order as `rewards`
         # rows (g, b, pg) — graph gi's rows live at its (bucket, slot)
@@ -672,8 +744,11 @@ class ZooEGRL(_EvoPopulation):
                 self.bank.add_graph(gi, acts_by_graph[gi], rewards[:, gi])
             info = self.learner.update(self.bank, len(rewards))
             if self.mode == "egrl" and n_g > self.e_g:
+                obs.counter("egrl.migrations").inc()
                 self.gnn_pop = self._migrate(
                     self.gnn_pop, gnn.flatten_params(self.learner.actor))
+        if self.bank is not None:
+            obs.gauge("egrl.replay_occupancy").set(len(self.bank))
 
         rec = {
             "steps": self.steps,
@@ -686,6 +761,13 @@ class ZooEGRL(_EvoPopulation):
                 for i, name in enumerate(zoo.names)},
             **info,
         }
+        # per-member-type attribution from the already-synced host
+        # copies (per_part_fit) — no extra device fetch
+        sp.set(steps=self.steps, gen_best=rec["gen_best_fitness"],
+               gen_mean=rec["gen_mean_fitness"], best=self.best_fitness,
+               valid_frac=rec["valid_frac"],
+               **{f"best_{n}": float(v.max())
+                  for n, v in per_part_fit.items() if v.size})
         self.history.append(rec)
         return rec
 

@@ -38,6 +38,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro import obs
+
 DEFAULT_CHUNK = 128
 CHUNK_CANDIDATES = (64, 128, 256)
 
@@ -144,23 +146,29 @@ def autotune(n: int, d: int, heads: int, dtype, *,
         _CACHE[key] = res
         return res
 
-    args = _bench_inputs(n, d, heads, dtype)
-    timed = list(cands) + ([("jnp", None)] if include_dense else [])
-    timings: Dict[str, Dict[str, float]] = {}
-    best: Optional[Tuple[str, Optional[int]]] = None
-    best_t = float("inf")
-    for backend, chunk in timed:
-        fn = _make_fn(backend, chunk, heads)
-        t_f = _time(jax.jit(lambda z, es, ed, a, fn=fn: fn(z, es, ed, a)),
-                    args)
-        t_fb = _time(jax.jit(jax.grad(
-            lambda z, es, ed, a, fn=fn: fn(z, es, ed, a).sum(),
-            argnums=(0, 1, 2))), args)
-        timings[_label(backend, chunk)] = {"fwd_us": round(t_f, 1),
-                                           "fwd_bwd_us": round(t_fb, 1)}
-        if backend != "jnp" and t_fb < best_t:
-            best, best_t = (backend, chunk), t_fb
-    assert best is not None
+    # the timing sweep compiles + times every candidate — a distinct
+    # span (like jit_compile) so first-touch cost per shape is
+    # attributable in a trace, never mistaken for steady-state time
+    with obs.span("gat_autotune", n=n, d=d, heads=heads,
+                  dtype=np.dtype(dtype).name, candidates=len(cands)) as sp:
+        args = _bench_inputs(n, d, heads, dtype)
+        timed = list(cands) + ([("jnp", None)] if include_dense else [])
+        timings: Dict[str, Dict[str, float]] = {}
+        best: Optional[Tuple[str, Optional[int]]] = None
+        best_t = float("inf")
+        for backend, chunk in timed:
+            fn = _make_fn(backend, chunk, heads)
+            t_f = _time(jax.jit(lambda z, es, ed, a, fn=fn: fn(z, es, ed, a)),
+                        args)
+            t_fb = _time(jax.jit(jax.grad(
+                lambda z, es, ed, a, fn=fn: fn(z, es, ed, a).sum(),
+                argnums=(0, 1, 2))), args)
+            timings[_label(backend, chunk)] = {"fwd_us": round(t_f, 1),
+                                               "fwd_bwd_us": round(t_fb, 1)}
+            if backend != "jnp" and t_fb < best_t:
+                best, best_t = (backend, chunk), t_fb
+        assert best is not None
+        sp.set(chosen=_label(best[0], best[1]))
     res = GATTune(best[0], best[1], timings)
     _CACHE[key] = res
     return res

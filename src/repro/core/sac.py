@@ -41,6 +41,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core import gnn
 from repro.core.replay import ReplayBank, ReplayBuffer
 from repro.graphs.batch import GraphBatch
@@ -217,20 +218,26 @@ class SACLearner:
         cfg = self.cfg
         if len(buffer) < cfg.batch or steps <= 0:
             return {}
-        pairs = [buffer.sample(cfg.batch) for _ in range(steps)]
-        acts = np.stack([p[0] for p in pairs])
-        rews = np.stack([p[1] for p in pairs])
-        self.key, k = jax.random.split(self.key)
-        noise = jnp.clip(
-            cfg.action_noise * jax.random.normal(
-                k, (steps, cfg.batch) + acts.shape[2:] + (3,)),
-            -cfg.noise_clip, cfg.noise_clip)
-        (self.actor, self.critic, self.opt_a, self.opt_c,
-         cl, al, en) = self._update_scan(
-            self.actor, self.critic, self.opt_a, self.opt_c,
-            jnp.asarray(acts), jnp.asarray(rews), noise)
-        return {"critic_loss": float(cl), "actor_loss": float(al),
-                "entropy": float(en)}
+        # the update already ends on host floats (an existing sync), so
+        # the span adds timing without any new device wait
+        with obs.span("sac_update", learner="sac", steps=steps,
+                      batch=cfg.batch) as sp:
+            pairs = [buffer.sample(cfg.batch) for _ in range(steps)]
+            acts = np.stack([p[0] for p in pairs])
+            rews = np.stack([p[1] for p in pairs])
+            self.key, k = jax.random.split(self.key)
+            noise = jnp.clip(
+                cfg.action_noise * jax.random.normal(
+                    k, (steps, cfg.batch) + acts.shape[2:] + (3,)),
+                -cfg.noise_clip, cfg.noise_clip)
+            (self.actor, self.critic, self.opt_a, self.opt_c,
+             cl, al, en) = self._update_scan(
+                self.actor, self.critic, self.opt_a, self.opt_c,
+                jnp.asarray(acts), jnp.asarray(rews), noise)
+            out = {"critic_loss": float(cl), "actor_loss": float(al),
+                   "entropy": float(en)}
+            sp.set(**out)
+            return out
 
 
 class ZooSAC:
@@ -350,19 +357,25 @@ class ZooSAC:
         cfg = self.cfg
         if len(bank) < cfg.batch or steps <= 0:
             return {}
-        acts, rews = [], []
-        for ids in self._bucket_ids:
-            a, r = bank.sample_bucket(ids, cfg.batch, steps)
-            acts.append(jnp.asarray(a))
-            rews.append(jnp.asarray(r))
-        self.key, k = jax.random.split(self.key)
-        noise = tuple(jnp.clip(
-            cfg.action_noise * jax.random.normal(kk, a.shape + (3,)),
-            -cfg.noise_clip, cfg.noise_clip)
-            for kk, a in zip(bucket_keys(k, self.zoo.n_buckets), acts))
-        (self.actor, self.critic, self.opt_a, self.opt_c,
-         cl, al, en) = self._update_scan(
-            self.actor, self.critic, self.opt_a, self.opt_c,
-            tuple(acts), tuple(rews), noise)
-        return {"critic_loss": float(cl), "actor_loss": float(al),
-                "entropy": float(en)}
+        # same as SACLearner.update: float() below is the existing host
+        # sync, so the span adds no device wait
+        with obs.span("sac_update", learner="zoo_sac", steps=steps,
+                      batch=cfg.batch) as sp:
+            acts, rews = [], []
+            for ids in self._bucket_ids:
+                a, r = bank.sample_bucket(ids, cfg.batch, steps)
+                acts.append(jnp.asarray(a))
+                rews.append(jnp.asarray(r))
+            self.key, k = jax.random.split(self.key)
+            noise = tuple(jnp.clip(
+                cfg.action_noise * jax.random.normal(kk, a.shape + (3,)),
+                -cfg.noise_clip, cfg.noise_clip)
+                for kk, a in zip(bucket_keys(k, self.zoo.n_buckets), acts))
+            (self.actor, self.critic, self.opt_a, self.opt_c,
+             cl, al, en) = self._update_scan(
+                self.actor, self.critic, self.opt_a, self.opt_c,
+                tuple(acts), tuple(rews), noise)
+            out = {"critic_loss": float(cl), "actor_loss": float(al),
+                   "entropy": float(en)}
+            sp.set(**out)
+            return out

@@ -16,6 +16,9 @@ from repro.distributed.hlo_analysis import collective_summary  # noqa: E402
 from repro.distributed.hlo_cost import analyze_cost  # noqa: E402
 from repro.launch.mesh import make_production_mesh  # noqa: E402
 from repro.launch.programs import lower_cell  # noqa: E402
+from repro.obs.log import get_logger  # noqa: E402
+
+_log = get_logger("dryrun")
 
 HBM_PER_CHIP = 16 * 1024 ** 3  # v5e
 
@@ -93,17 +96,18 @@ def run_cell(arch: str, shape: str, multi_pod: bool, outdir=None,
         "overrides": {k: str(v) for k, v in (overrides or {}).items()},
     }
     if verbose:
-        print(f"--- {arch} x {shape} on {rec['mesh']} ---")
-        print(mem)
-        print({k: v for k, v in cost.items()
-               if k in ("flops", "bytes accessed", "optimal_seconds")})
-        print(f"collective bytes/device: {coll['total_per_device_bytes']:.3e} "
-              f"({coll['n_ops']} ops)")
-        print(f"per-device HBM: {per_dev / 2**30:.2f} GiB measured "
-              f"({'fits' if rec['fits_hbm'] else 'does not fit'}); "
-              f"{projected / 2**30:.2f} GiB TPU-projected "
-              f"({'fits' if rec['fits_hbm_tpu_projected'] else 'DOES NOT FIT'})"
-              f"  lower {t_lower:.1f}s compile {t_compile:.1f}s")
+        _log.info(f"--- {arch} x {shape} on {rec['mesh']} ---")
+        _log.info(str(mem))
+        _log.info(str({k: v for k, v in cost.items()
+                       if k in ("flops", "bytes accessed", "optimal_seconds")}))
+        _log.info(f"collective bytes/device: "
+                  f"{coll['total_per_device_bytes']:.3e} "
+                  f"({coll['n_ops']} ops)")
+        _log.info(f"per-device HBM: {per_dev / 2**30:.2f} GiB measured "
+                  f"({'fits' if rec['fits_hbm'] else 'does not fit'}); "
+                  f"{projected / 2**30:.2f} GiB TPU-projected "
+                  f"({'fits' if rec['fits_hbm_tpu_projected'] else 'DOES NOT FIT'})"
+                  f"  lower {t_lower:.1f}s compile {t_compile:.1f}s")
     if outdir:
         os.makedirs(outdir, exist_ok=True)
         name = f"{arch}__{shape}__{rec['mesh']}{tag}.json"
@@ -128,7 +132,7 @@ def main():
             if ok:
                 cells.append((a, s))
             else:
-                print(f"SKIP {a} x {s}: {why}")
+                _log.info(f"SKIP {a} x {s}: {why}")
     else:
         archs = [args.arch] if args.arch else list(ARCH_IDS)
         shapes = [args.shape] if args.shape else list(SHAPES)
@@ -140,7 +144,7 @@ def main():
                 if ok:
                     cells.append((a, s))
                 else:
-                    print(f"SKIP {a} x {s}: {why}")
+                    _log.info(f"SKIP {a} x {s}: {why}")
 
     failures = []
     for a, s in cells:
@@ -149,12 +153,12 @@ def main():
                 run_cell(a, s, mp, outdir=args.out)
             except Exception as e:  # noqa: BLE001
                 failures.append((a, s, mp, repr(e)))
-                print(f"FAIL {a} x {s} multi_pod={mp}: {e}")
+                _log.error(f"FAIL {a} x {s} multi_pod={mp}: {e}")
                 traceback.print_exc()
-    print(f"\n{len(cells) * len(meshes) - len(failures)} ok, "
-          f"{len(failures)} failed")
+    _log.info(f"{len(cells) * len(meshes) - len(failures)} ok, "
+              f"{len(failures)} failed")
     for f_ in failures:
-        print("  FAILED:", f_)
+        _log.error(f"  FAILED: {f_}")
     return 1 if failures else 0
 
 

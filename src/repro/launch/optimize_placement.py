@@ -21,7 +21,10 @@ from repro.graphs.zoo import PAPER_WORKLOADS
 from repro.memsim import tiers as T
 from repro.memsim.compiler import compiler_reference
 from repro.memsim.simulator import build_sim_graph, evaluate
+from repro.obs.log import get_logger
 import jax.numpy as jnp
+
+_log = get_logger("optimize_placement")
 
 
 def make_graph(arch: str, shape_name: str):
@@ -47,7 +50,7 @@ def plan_from_mapping(graph, mapping: np.ndarray, meta: dict) -> dict:
 
 
 def optimize(arch: str, shape_name: str, steps: int, mode: str = "egrl",
-             seed: int = 0, log=print):
+             seed: int = 0, log=_log.info):
     g = make_graph(arch, shape_name)
     algo = EGRL(g, EGRLConfig(total_steps=steps, seed=seed), mode=mode)
     algo.train(log=log)
@@ -80,9 +83,9 @@ def main():
     path = os.path.join(args.out, f"{args.arch}__{args.shape}.json")
     with open(path, "w") as f:
         json.dump(plan, f, indent=1)
-    print(f"speedup vs compiler: {plan['speedup_vs_compiler']:.3f} "
-          f"({plan['compiler_latency_ms']:.3f} -> {plan['latency_ms']:.3f} ms)")
-    print(f"plan written to {path}")
+    _log.info(f"speedup vs compiler: {plan['speedup_vs_compiler']:.3f} "
+              f"({plan['compiler_latency_ms']:.3f} -> {plan['latency_ms']:.3f} ms)")
+    _log.info(f"plan written to {path}")
 
 
 if __name__ == "__main__":

@@ -11,7 +11,10 @@ import jax
 
 from repro.configs.registry import ARCH_IDS, get_config, smoke_config
 from repro.models.zoo import get_model
+from repro.obs.log import get_logger
 from repro.serving.engine import Engine, Request
+
+_log = get_logger("serve")
 
 
 def main():
@@ -40,10 +43,10 @@ def main():
         eng.submit(Request(rid=i, prompt=prompt, max_new_tokens=args.max_new))
     done = eng.run_until_drained()
     stats = eng.stats()
-    print(f"arch={cfg.name} served {len(done)} requests in "
-          f"{time.monotonic() - t0:.1f}s")
+    _log.info(f"arch={cfg.name} served {len(done)} requests in "
+              f"{time.monotonic() - t0:.1f}s")
     for k, v in stats.items():
-        print(f"  {k}: {v:.2f}")
+        _log.info(f"  {k}: {v:.2f}")
 
 
 if __name__ == "__main__":

@@ -22,11 +22,15 @@ from typing import List, Optional, Sequence
 
 import numpy as np
 
+from repro import obs
 from repro.configs.base import SHAPES
 from repro.configs.registry import ARCH_IDS
+from repro.obs.log import get_logger
 from repro.serving.placement_service import (PlacementRequest,
                                              PlacementResult,
                                              PlacementService)
+
+_log = get_logger("serve_placements")
 
 # the serving shapes: every registry arch supports all three (long_500k
 # is SSM/hybrid-only, so it is not part of the default serving catalog)
@@ -80,9 +84,10 @@ def slo_summary(results: List[PlacementResult]) -> dict:
 
 def serve(requests: List[PlacementRequest], seed: int = 0,
           cache: Optional[str] = None, budget=None, batch=None,
-          pop_size: int = 8, log=print):
+          pop_size: int = 8, log=_log.info):
     """Run a request stream through a fresh service; returns
-    (results, summary dict incl. service stats + throughput)."""
+    (results, summary dict incl. service stats + throughput, service).
+    ``log=None`` silences the SLO lines (bench mode)."""
     t0 = time.perf_counter()
     svc = PlacementService(seed=seed, cache=cache, budget=budget,
                            batch=batch, pop_size=pop_size)
@@ -109,7 +114,10 @@ def serve(requests: List[PlacementRequest], seed: int = 0,
             f"{summary['miss_p50_ms']:.0f}/{summary['miss_p99_ms']:.0f} ms")
         log(f"quality: mean speedup {summary['mean_speedup']:.3f} "
             f"vs compiler, egrl-sourced {summary['egrl_frac']:.2f}")
-    return results, summary
+    # close the trace with the service's counter/histogram snapshot so
+    # trace_report can render it next to the span tree (no-op when off)
+    obs.emit_metrics(svc.metrics)
+    return results, summary, svc
 
 
 def main():
@@ -133,15 +141,15 @@ def main():
 
     reqs = synthetic_stream(args.requests, seed=args.seed,
                             archs=args.archs, shapes=args.shapes)
-    _, summary = serve(reqs, seed=args.seed, cache=args.cache,
-                       budget=args.budget, batch=args.batch,
-                       pop_size=args.pop)
+    _, summary, _ = serve(reqs, seed=args.seed, cache=args.cache,
+                          budget=args.budget, batch=args.batch,
+                          pop_size=args.pop)
     if args.out:
         os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
         with open(args.out, "w") as f:
             json.dump(summary, f, indent=1)
             f.write("\n")
-        print(f"summary written to {args.out}")
+        _log.info(f"summary written to {args.out}")
 
 
 if __name__ == "__main__":

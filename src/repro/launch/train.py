@@ -24,8 +24,11 @@ from repro.data.pipeline import Prefetcher, SyntheticLM, device_batch
 from repro.distributed.rules import make_plan
 from repro.launch.mesh import make_mesh
 from repro.models.zoo import get_model
+from repro.obs.log import get_logger, set_quiet
 from repro.training.train_step import make_train_step
 from repro.utils.params import param_count
+
+_log = get_logger("train")
 
 
 class TrainLoop:
@@ -66,7 +69,7 @@ class TrainLoop:
     def request_preempt(self, *_):
         self._preempted = True
 
-    def run(self, steps: int, *, save_every: int = 0, log=print):
+    def run(self, steps: int, *, save_every: int = 0, log=_log.info):
         params, opt_state, start = self.restore_or_init()
         batch_axes = self.plan.batch_axes if self.plan else None
         step_times = []
@@ -111,7 +114,10 @@ def main():
     ap.add_argument("--grad-compression", action="store_true")
     ap.add_argument("--distributed", action="store_true",
                     help="call jax.distributed.initialize() (multi-host)")
+    ap.add_argument("--quiet", action="store_true",
+                    help="suppress per-step progress lines")
     args = ap.parse_args()
+    set_quiet(args.quiet)
 
     if args.distributed:
         jax.distributed.initialize()
@@ -129,8 +135,8 @@ def main():
                      grad_compression=args.grad_compression)
     signal.signal(signal.SIGTERM, loop.request_preempt)
     n = param_count(loop.model.init(jax.random.PRNGKey(0)))
-    print(f"arch={cfg.name} params={n / 1e6:.1f}M "
-          f"batch={args.global_batch}x{args.seq}")
+    _log.info(f"arch={cfg.name} params={n / 1e6:.1f}M "
+              f"batch={args.global_batch}x{args.seq}")
     loop.run(args.steps, save_every=args.save_every)
 
 

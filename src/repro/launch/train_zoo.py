@@ -22,10 +22,13 @@ import os
 
 from repro.core.egrl import EGRLConfig, ZooEGRL, evaluate_gnn_zoo
 from repro.graphs.zoo import WORKLOADS
+from repro.obs.log import get_logger, set_quiet
+
+_log = get_logger("train_zoo")
 
 
 def train_zoo(train, holdout=(), steps: int = 2000, mode: str = "egrl",
-              agg: str = None, seed: int = 0, buckets=None, log=print):
+              agg: str = None, seed: int = 0, buckets=None, log=_log.info):
     algo = ZooEGRL([WORKLOADS[n]() for n in train],
                    EGRLConfig(total_steps=steps, seed=seed),
                    mode=mode, fitness_agg=agg, buckets=buckets)
@@ -65,7 +68,10 @@ def main():
                          "(default: REPRO_ZOO_BUCKETS)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default="experiments/zoo")
+    ap.add_argument("--quiet", action="store_true",
+                    help="suppress per-generation progress lines")
     args = ap.parse_args()
+    set_quiet(args.quiet)
 
     report, _ = train_zoo(args.train, args.holdout, args.steps, args.mode,
                           args.agg, args.seed, args.buckets)
@@ -74,11 +80,13 @@ def main():
         args.out, f"zoo_{'-'.join(args.train)}_{args.mode}.json")
     with open(path, "w") as f:
         json.dump(report, f, indent=1)
+    # the csv-shaped result lines are the script's output, not progress:
+    # they bypass --quiet so piping into cut/awk keeps working
     for name, sp in report["train_best_speedup"].items():
         print(f"train,{name},{sp:.3f}")
     for name, sp in report.get("zero_shot_speedup", {}).items():
         print(f"zero_shot,{name},{sp:.3f}")
-    print(f"report written to {path}")
+    _log.info(f"report written to {path}")
 
 
 if __name__ == "__main__":

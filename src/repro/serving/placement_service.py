@@ -64,6 +64,17 @@ Env knobs (utils/envpolicy.py, fail-loud):
   generations per miss batch.
 - ``REPRO_SERVE_BATCH``  — "auto" (default, 4) | int: max distinct
   graphs per refinement batch AND the canonical graph-slot count.
+
+Observability (PR 8): the serve path is traced end-to-end with
+``repro.obs`` spans — ``submit`` (children ``extract``/``hash``/
+``cache_lookup``) and ``tick`` -> ``refine_class`` -> ``batch_assembly``
+/``warm_start``/``evolve``/``commit`` — and ALL service bookkeeping
+(served/hits/misses/failed/ticks/faults counters, per-path wall-time
+and per-size-class refinement histograms) lives in a per-service
+``MetricsRegistry``.  ``stats()`` reads those counters directly, so
+``stats()``, ``bench_serve`` and the SLO summary report from one source
+of truth in every ``REPRO_OBS`` mode (metrics are always on; only span
+EMISSION is mode-gated).  See docs/observability.md.
 """
 from __future__ import annotations
 
@@ -74,11 +85,13 @@ from typing import Dict, Iterable, List, Optional, Tuple
 
 import numpy as np
 
+from repro import obs
 from repro.core.egrl import EGRLConfig, ZooEGRL
 from repro.graphs.batch import build_graph_batch
 from repro.graphs.extract import extract_for
 from repro.graphs.graph import WorkloadGraph
 from repro.memsim.compiler import compiler_reference
+from repro.obs.metrics import MetricsRegistry
 from repro.utils.envpolicy import env_policy
 
 _N_CLASS_MIN = 64       # smallest canonical node count
@@ -155,8 +168,17 @@ class PlacementService:
         self._queue: List[Tuple[PlacementRequest, WorkloadGraph,
                                 str, float]] = []
         self._prior_vec: Optional[np.ndarray] = None
-        self.evaluator_calls = 0               # refinement batches run
-        self._counts = dict(served=0, hits=0, misses=0, failed=0, ticks=0)
+        # per-service metrics: THE bookkeeping (stats() reads these);
+        # pre-created so stats() has stable keys before any traffic
+        self.metrics = MetricsRegistry()
+        for name in ("served", "hits", "misses", "failed", "ticks",
+                     "faults", "evaluator_calls"):
+            self.metrics.counter(name)
+
+    @property
+    def evaluator_calls(self) -> int:
+        """Refinement batches run (cache hits never increment it)."""
+        return self.metrics.counter("evaluator_calls").value
 
     # ------------------------------------------------------------ intake
     def submit(self, req: PlacementRequest) -> Optional[PlacementResult]:
@@ -164,19 +186,29 @@ class PlacementService:
         misses enqueue and return ``None`` (answered by a later
         ``tick``)."""
         t0 = time.perf_counter()
-        try:
-            g = extract_for(req.arch, req.shape)
-            h = g.canonical_hash()
-        except Exception as e:  # unknown arch/shape, malformed graph
-            return self._result(
-                req, None, {"error": f"{type(e).__name__}: {e}"}, t0)
-        if self.cache_enabled and h in self._cache:
-            # the hit path never builds a batch, never runs a driver
-            self._counts["hits"] += 1
-            return self._result(req, h, self._cache[h], t0, cache_hit=True)
-        self._counts["misses"] += 1
-        self._queue.append((req, g, h, t0))
-        return None
+        with obs.span("submit", request_id=req.request_id, arch=req.arch,
+                      shape=req.shape) as sp:
+            try:
+                with obs.span("extract"):
+                    g = extract_for(req.arch, req.shape)
+                with obs.span("hash"):
+                    h = g.canonical_hash()
+            except Exception as e:  # unknown arch/shape, malformed graph
+                sp.set(outcome="fault")
+                return self._result(
+                    req, None, {"error": f"{type(e).__name__}: {e}"}, t0)
+            with obs.span("cache_lookup") as cl:
+                entry = self._cache.get(h) if self.cache_enabled else None
+                cl.set(hit=entry is not None)
+            if entry is not None:
+                # the hit path never builds a batch, never runs a driver
+                self.metrics.counter("hits").inc()
+                sp.set(outcome="hit")
+                return self._result(req, h, entry, t0, cache_hit=True)
+            self.metrics.counter("misses").inc()
+            sp.set(outcome="miss")
+            self._queue.append((req, g, h, t0))
+            return None
 
     # ------------------------------------------------------- refinement
     def tick(self) -> List[PlacementResult]:
@@ -186,23 +218,25 @@ class PlacementService:
         drain the queue."""
         if not self._queue:
             return []
-        self._counts["ticks"] += 1
-        todo: Dict[str, WorkloadGraph] = {}
-        for _, g, h, _ in self._queue:
-            if h not in todo and len(todo) < self.batch_max:
-                todo[h] = g
-        refined = self._refine(todo)
-        out, keep = [], []
-        for req, g, h, t0 in self._queue:
-            entry = refined.get(h)
-            if entry is None and self.cache_enabled:
-                entry = self._cache.get(h)
-            if entry is None:
-                keep.append((req, g, h, t0))
-                continue
-            out.append(self._result(req, h, entry, t0))
-        self._queue = keep
-        return out
+        with obs.span("tick", queued=len(self._queue)) as sp:
+            self.metrics.counter("ticks").inc()
+            todo: Dict[str, WorkloadGraph] = {}
+            for _, g, h, _ in self._queue:
+                if h not in todo and len(todo) < self.batch_max:
+                    todo[h] = g
+            refined = self._refine(todo)
+            out, keep = [], []
+            for req, g, h, t0 in self._queue:
+                entry = refined.get(h)
+                if entry is None and self.cache_enabled:
+                    entry = self._cache.get(h)
+                if entry is None:
+                    keep.append((req, g, h, t0))
+                    continue
+                out.append(self._result(req, h, entry, t0))
+            self._queue = keep
+            sp.set(distinct=len(todo), answered=len(out))
+            return out
 
     def _refine(self, todo: Dict[str, WorkloadGraph]) -> Dict[str, dict]:
         """Refine the distinct graphs in ``todo``, grouped by size
@@ -215,18 +249,31 @@ class PlacementService:
             classes.setdefault(size_class(g.n), []).append((h, g))
         #                                        order independence
         for n_class, items in sorted(classes.items()):
+            # the refine_class span wraps the CALL (not the body), so a
+            # monkeypatched/faulting refinement still closes its span
+            # with the exception recorded as an ``error`` attribute
+            t0 = time.perf_counter()
             try:
-                out.update(self._refine_class(n_class, items))
+                with obs.span("refine_class", n_class=n_class,
+                              graphs=len(items)):
+                    out.update(self._refine_class(n_class, items))
             except Exception as e:
+                self.metrics.counter("faults").inc()
                 if len(items) == 1:
                     h = items[0][0]
                     out[h] = {"error": f"{type(e).__name__}: {e}"}
-                    continue
-                for h, g in items:             # isolate the bad graph
-                    try:
-                        out.update(self._refine_class(n_class, [(h, g)]))
-                    except Exception as e1:
-                        out[h] = {"error": f"{type(e1).__name__}: {e1}"}
+                else:
+                    for h, g in items:         # isolate the bad graph
+                        try:
+                            with obs.span("refine_class", n_class=n_class,
+                                          graphs=1, retry=True):
+                                out.update(
+                                    self._refine_class(n_class, [(h, g)]))
+                        except Exception as e1:
+                            self.metrics.counter("faults").inc()
+                            out[h] = {"error": f"{type(e1).__name__}: {e1}"}
+            self.metrics.histogram("refine_ms", cls=f"n{n_class}").observe(
+                (time.perf_counter() - t0) * 1e3)
         if self.cache_enabled:
             for h, entry in out.items():
                 if "error" not in entry:
@@ -239,54 +286,70 @@ class PlacementService:
         batch; returns {hash: placement entry} for every item."""
         hashes = [h for h, _ in items]
         graphs = [g for _, g in items]
-        # canonical geometry: always batch_max graph slots (cyclic
-        # fill; filler results are discarded), pow2 widths, normalized
-        # slot names -> one jit executable per (class, fan, release)
-        filled = [graphs[i % len(graphs)] for i in range(self.batch_max)]
-        arrs = [g.arrays() for g in filled]
-        fan = max(1, max((len(p) for a in arrs for p in a["producers_of"]),
-                         default=0))
-        # bincount of last_consumer bounds the release-table multiplicity
-        rel = max(int(np.bincount(
-            a["last_consumer"].astype(np.int64), minlength=1).max())
-            for a in arrs)
-        batch = build_graph_batch(
-            [dataclasses.replace(g, name=f"slot{i}")
-             for i, g in enumerate(filled)],
-            n_max=n_class, w_max=n_class,
-            in_width=_pow2(fan, _IN_WIDTH_MIN),
-            release_width=_pow2(rel, _RELEASE_MIN))
-        cfg = EGRLConfig(pop_size=self.pop_size,
-                         seed=self._batch_seed(hashes),
-                         reward_scale=self.reward_scale)
-        drv = ZooEGRL(filled, cfg, mode="ea", zoo=batch)
-        if self._prior_vec is not None:
-            drv.warm_start(self._prior_vec)
-        self.evaluator_calls += 1
-        for _ in range(self.budget):
-            drv.generation()
-        self._prior_vec = drv.best_gnn_vec()   # continual warm start
-        out = {}
-        for i, (h, g) in enumerate(items):     # slots >= len(items) are
-            sp = float(drv.best_reward[i]) / self.reward_scale  # fillers
-            ref_ms = float(batch.ref_latency[i]) * 1e3
-            if sp > 1.0:   # valid AND beats the heuristic compiler
-                out[h] = {
-                    "mapping": np.asarray(drv.best_mapping[i], np.int32),
-                    "speedup": sp, "latency_ms": ref_ms / sp,
-                    "ref_latency_ms": ref_ms, "source": "egrl",
-                }
-            else:
-                # never-worse-than-compiler guarantee: a short budget
-                # (or an unlucky batch) must not serve an invalid or
-                # slower placement — fall back to the always-valid
-                # heuristic reference mapping (speedup 1.0)
-                cmap, _ = compiler_reference(g)
-                out[h] = {
-                    "mapping": np.asarray(cmap, np.int32),
-                    "speedup": 1.0, "latency_ms": ref_ms,
-                    "ref_latency_ms": ref_ms, "source": "compiler",
-                }
+        with obs.span("batch_assembly", n_class=n_class,
+                      graphs=len(items)):
+            # canonical geometry: always batch_max graph slots (cyclic
+            # fill; filler results are discarded), pow2 widths,
+            # normalized slot names -> one jit executable per
+            # (class, fan, release)
+            filled = [graphs[i % len(graphs)]
+                      for i in range(self.batch_max)]
+            arrs = [g.arrays() for g in filled]
+            fan = max(1, max((len(p) for a in arrs
+                              for p in a["producers_of"]), default=0))
+            # bincount of last_consumer bounds the release-table
+            # multiplicity
+            rel = max(int(np.bincount(
+                a["last_consumer"].astype(np.int64), minlength=1).max())
+                for a in arrs)
+            batch = build_graph_batch(
+                [dataclasses.replace(g, name=f"slot{i}")
+                 for i, g in enumerate(filled)],
+                n_max=n_class, w_max=n_class,
+                in_width=_pow2(fan, _IN_WIDTH_MIN),
+                release_width=_pow2(rel, _RELEASE_MIN))
+            cfg = EGRLConfig(pop_size=self.pop_size,
+                             seed=self._batch_seed(hashes),
+                             reward_scale=self.reward_scale)
+            drv = ZooEGRL(filled, cfg, mode="ea", zoo=batch)
+        # always emitted (warm=False on the first-ever batch) so the
+        # serve span taxonomy is complete on every trace
+        with obs.span("warm_start", warm=self._prior_vec is not None):
+            if self._prior_vec is not None:
+                drv.warm_start(self._prior_vec)
+        self.metrics.counter("evaluator_calls").inc()
+        with obs.span("evolve", n_class=n_class,
+                      generations=self.budget):
+            for _ in range(self.budget):
+                drv.generation()
+            self._prior_vec = drv.best_gnn_vec()  # continual warm start
+        with obs.span("commit", graphs=len(items)) as commit_sp:
+            out = {}
+            n_egrl = 0
+            for i, (h, g) in enumerate(items):  # slots >= len(items)
+                sp = float(drv.best_reward[i]) / self.reward_scale
+                ref_ms = float(batch.ref_latency[i]) * 1e3  # fillers
+                if sp > 1.0:   # valid AND beats the heuristic compiler
+                    n_egrl += 1
+                    out[h] = {
+                        "mapping": np.asarray(drv.best_mapping[i],
+                                              np.int32),
+                        "speedup": sp, "latency_ms": ref_ms / sp,
+                        "ref_latency_ms": ref_ms, "source": "egrl",
+                    }
+                else:
+                    # never-worse-than-compiler guarantee: a short
+                    # budget (or an unlucky batch) must not serve an
+                    # invalid or slower placement — fall back to the
+                    # always-valid heuristic reference mapping
+                    # (speedup 1.0)
+                    cmap, _ = compiler_reference(g)
+                    out[h] = {
+                        "mapping": np.asarray(cmap, np.int32),
+                        "speedup": 1.0, "latency_ms": ref_ms,
+                        "ref_latency_ms": ref_ms, "source": "compiler",
+                    }
+            commit_sp.set(egrl=n_egrl, compiler=len(items) - n_egrl)
         return out
 
     def _batch_seed(self, hashes: List[str]) -> int:
@@ -305,13 +368,15 @@ class PlacementService:
                 entry: dict, t0: float,
                 cache_hit: bool = False) -> PlacementResult:
         wall = (time.perf_counter() - t0) * 1e3
-        self._counts["served"] += 1
+        self.metrics.counter("served").inc()
         if "error" in entry:
-            self._counts["failed"] += 1
+            self.metrics.counter("failed").inc()
             return PlacementResult(
                 request_id=req.request_id, arch=req.arch, shape=req.shape,
                 status="failed", cache_hit=cache_hit, graph_hash=h,
                 error=entry["error"], wall_ms=wall)
+        self.metrics.histogram(
+            "wall_ms", path="hit" if cache_hit else "miss").observe(wall)
         return PlacementResult(
             request_id=req.request_id, arch=req.arch, shape=req.shape,
             status="ok", cache_hit=cache_hit, graph_hash=h,
@@ -352,7 +417,14 @@ class PlacementService:
         return out
 
     def stats(self) -> dict:
-        c = dict(self._counts)
+        """Service counters, read straight off the per-service obs
+        metrics registry — the same counters the serve spans annotate
+        and the SLO summary/bench consume, so there is exactly ONE
+        bookkeeping source of truth (asserted by
+        tests/test_placement_service.py)."""
+        c = {k: self.metrics.counter(k).value
+             for k in ("served", "hits", "misses", "failed", "ticks",
+                       "faults")}
         c.update(queued=len(self._queue), cache_size=len(self._cache),
                  evaluator_calls=self.evaluator_calls,
                  hit_rate=c["hits"] / max(c["served"], 1))

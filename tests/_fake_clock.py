@@ -1,0 +1,21 @@
+"""Deterministic injectable clock for tracer tests (repro.obs.trace
+takes any ``() -> float`` in seconds): tests advance time explicitly
+and assert EXACT span durations instead of sleeping."""
+from __future__ import annotations
+
+
+class FakeClock:
+    """Callable clock.  ``advance(dt)`` moves time forward; with
+    ``auto_tick`` every READING additionally advances the clock by that
+    amount first (so even back-to-back reads are strictly ordered)."""
+
+    def __init__(self, start: float = 0.0, auto_tick: float = 0.0):
+        self.t = float(start)
+        self.auto_tick = float(auto_tick)
+
+    def advance(self, dt: float) -> None:
+        self.t += float(dt)
+
+    def __call__(self) -> float:
+        self.t += self.auto_tick
+        return self.t

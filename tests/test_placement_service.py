@@ -199,6 +199,31 @@ def test_env_knobs_fail_loud(monkeypatch):
     assert not svc.cache_enabled
 
 
+def test_stats_and_slo_summary_one_source_of_truth():
+    """stats() is read straight off the per-service obs counters, and
+    the SLO summary is computed from the results those counters
+    tracked — the two views must agree exactly, and the counters must
+    BE the service's metrics objects (one bookkeeping source of
+    truth, whatever REPRO_OBS says)."""
+    from repro.launch.serve_placements import slo_summary
+
+    svc = PlacementService(seed=0)
+    first = svc.run([PlacementRequest(0, "qwen3-0.6b", "decode_32k"),
+                     PlacementRequest(1, "mamba2-780m", "decode_32k")])
+    repeats = svc.run([PlacementRequest(i, a, "decode_32k")
+                       for i, a in zip(range(2, 6),
+                                       ["qwen3-0.6b", "mamba2-780m"] * 2)])
+    results = first + repeats
+    st, s = svc.stats(), slo_summary(results)
+    assert st["served"] == s["requests"] == 6
+    assert st["hits"] == s["cache_hits"] == 4
+    assert st["misses"] == s["cache_misses"] == 2
+    assert st["failed"] == s["failed"] == 0
+    assert st["hit_rate"] == pytest.approx(s["hit_rate"], abs=1e-4)
+    assert st["served"] == svc.metrics.counter("served").value
+    assert st["hits"] == svc.metrics.counter("hits").value
+
+
 def test_cache_off_always_refines():
     svc = PlacementService(seed=0, cache="off", budget=1)
     res = svc.run([PlacementRequest(0, "qwen3-0.6b", "decode_32k"),

@@ -230,6 +230,27 @@ def check(data: dict) -> list:
         if failed not in (0,):
             _fail(errors, f"serve.failed: the synthetic catalog must serve "
                           f"cleanly, got {failed!r}")
+        # obs_overhead: the hit-path tracing tax (PR 8) — the p50 pair
+        # must be present and the RELATIVE overhead bounded (< 20%);
+        # the bound is structural (a ratio on one machine in one run),
+        # never an absolute timing
+        ov = srv.get("obs_overhead")
+        if not isinstance(ov, dict):
+            _fail(errors, "serve.obs_overhead: missing (bench_serve must "
+                          "measure the hit-path tracing tax)")
+        else:
+            _require(errors, "serve.obs_overhead", ov, "hit_p50_obs_on_ms")
+            _require(errors, "serve.obs_overhead", ov, "hit_p50_obs_off_ms")
+            _require(errors, "serve.obs_overhead", ov, "reps")
+            frac = ov.get("overhead_frac")
+            if not (isinstance(frac, (int, float))
+                    and not isinstance(frac, bool) and math.isfinite(frac)):
+                _fail(errors, f"serve.obs_overhead.overhead_frac: expected "
+                              f"a finite number, got {frac!r}")
+            elif frac >= 0.2:
+                _fail(errors, f"serve.obs_overhead.overhead_frac: tracing "
+                              f"costs {frac:.1%} on the hit path — the "
+                              f"flight recorder must stay under 20%")
 
     # ---- pop_sharding: one row per benched mesh size
     pop = data.get("pop_sharding")

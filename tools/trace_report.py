@@ -1,0 +1,256 @@
+#!/usr/bin/env python
+"""Roll a ``REPRO_OBS=jsonl`` trace into a human-readable report:
+
+- **span tree** — spans aggregated by their name PATH (root/child/...),
+  with count, total, p50/p99 and the child-time sum per node, so "where
+  did the 12-second miss batch go" reads straight off the indentation;
+- **compile vs execute** — per span name, the population with
+  ``jit_compile`` / ``gat_autotune`` descendants (first same-class
+  batch) vs without (steady state), p50 of each and the compile total —
+  the audit of the executable-reuse claim;
+- **top-N slowest individual spans**;
+- **serve timeline** — one line per ``submit`` span in stream order
+  (request id, arch/shape, hit|miss|fault outcome, wall);
+- **metrics** — the last ``metrics`` snapshot event, if one was emitted.
+
+``--gate`` turns the structural invariants into an exit code (CI runs
+it over a fresh bench_serve trace): non-empty span tree, zero ``error``
+spans, every parent's child-durations sum <= its own duration, and —
+when the trace contains serve traffic — the full serve span taxonomy.
+
+    python tools/trace_report.py serve_trace.jsonl [--top 10] [--gate]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import sys
+from collections import defaultdict
+
+COMPILE_SPANS = ("jit_compile", "gat_autotune")
+# the serve taxonomy the acceptance gate requires (submit side vs the
+# refinement side, which only exists once a miss batch ran)
+SUBMIT_TAXONOMY = ("submit", "extract", "hash", "cache_lookup")
+REFINE_TAXONOMY = ("tick", "refine_class", "batch_assembly",
+                   "warm_start", "evolve", "commit")
+
+
+def load_events(path):
+    events, bad = [], 0
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                events.append(json.loads(line))
+            except json.JSONDecodeError:
+                bad += 1          # torn tail line of a killed process
+    return events, bad
+
+
+def _pct(xs, q):
+    if not xs:
+        return 0.0
+    s = sorted(xs)
+    k = (len(s) - 1) * q / 100.0
+    f, c = math.floor(k), math.ceil(k)
+    if f == c:
+        return s[f]
+    return s[f] + (s[c] - s[f]) * (k - f)
+
+
+class TraceIndex:
+    def __init__(self, events):
+        self.spans = [e for e in events if e.get("type") == "span"]
+        self.by_id = {e["id"]: e for e in self.spans}
+        self.children = defaultdict(list)
+        for e in self.spans:
+            p = e.get("parent")
+            if p is not None and p in self.by_id:
+                self.children[p].append(e)
+        self._paths = {}
+
+    def path(self, span) -> str:
+        sid = span["id"]
+        if sid not in self._paths:
+            p = span.get("parent")
+            if p is None or p not in self.by_id:
+                self._paths[sid] = span["name"]
+            else:
+                self._paths[sid] = self.path(self.by_id[p]) + "/" + span["name"]
+        return self._paths[sid]
+
+    def child_sum(self, span) -> float:
+        return sum(c["dur_ms"] for c in self.children.get(span["id"], ()))
+
+    def has_compile_descendant(self, span) -> bool:
+        stack = list(self.children.get(span["id"], ()))
+        while stack:
+            c = stack.pop()
+            if c["name"] in COMPILE_SPANS:
+                return True
+            stack.extend(self.children.get(c["id"], ()))
+        return False
+
+
+def span_tree(idx: TraceIndex):
+    """{path: [durations]} plus per-path child-time sums."""
+    durs, child = defaultdict(list), defaultdict(float)
+    for e in idx.spans:
+        p = idx.path(e)
+        durs[p].append(e["dur_ms"])
+        child[p] += idx.child_sum(e)
+    return durs, child
+
+
+def print_tree(idx: TraceIndex, out=print):
+    durs, child = span_tree(idx)
+    out("== span tree (aggregated by path) ==")
+    if not durs:
+        out("  (no spans)")
+        return
+    w = max(len(p.split("/")[-1]) + 2 * p.count("/") for p in durs) + 2
+    out(f"  {'span':<{w}} {'count':>6} {'total_ms':>11} {'p50_ms':>10} "
+        f"{'p99_ms':>10} {'child_ms':>11}")
+    for p in sorted(durs):
+        name = "  " * p.count("/") + p.split("/")[-1]
+        xs = durs[p]
+        out(f"  {name:<{w}} {len(xs):>6} {sum(xs):>11.2f} "
+            f"{_pct(xs, 50):>10.3f} {_pct(xs, 99):>10.3f} "
+            f"{child[p]:>11.2f}")
+
+
+def print_compile_attribution(idx: TraceIndex, out=print):
+    out("\n== compile vs execute (first-touch attribution) ==")
+    comp = [e for e in idx.spans if e["name"] in COMPILE_SPANS]
+    if not comp:
+        out("  (no jit_compile / gat_autotune spans in this trace)")
+        return
+    total = sum(e["dur_ms"] for e in comp)
+    out(f"  {len(comp)} compile/autotune spans, {total:.1f} ms total")
+    for e in comp:
+        what = e["attrs"].get("what") or e["attrs"].get("chosen", "")
+        out(f"    {e['name']:<14} {e['dur_ms']:>10.2f} ms  {what}")
+    # population split per parent span name: with vs without a compile
+    # descendant — 'evolve (first batch)' vs 'evolve (steady state)'
+    split = defaultdict(lambda: ([], []))
+    for e in idx.spans:
+        if e["name"] in COMPILE_SPANS:
+            continue
+        split[e["name"]][0 if idx.has_compile_descendant(e) else 1].append(
+            e["dur_ms"])
+    rows = [(n, a, b) for n, (a, b) in sorted(split.items()) if a]
+    if rows:
+        out(f"  {'span':<16} {'n_compile':>10} {'p50_ms':>10} "
+            f"{'n_execute':>10} {'p50_ms':>10}")
+        for name, with_c, without_c in rows:
+            out(f"  {name:<16} {len(with_c):>10} {_pct(with_c, 50):>10.2f} "
+                f"{len(without_c):>10} {_pct(without_c, 50):>10.2f}")
+
+
+def print_slowest(idx: TraceIndex, top: int, out=print):
+    out(f"\n== top {top} slowest spans ==")
+    for e in sorted(idx.spans, key=lambda e: -e["dur_ms"])[:top]:
+        attrs = {k: v for k, v in e["attrs"].items()
+                 if k in ("n_class", "outcome", "what", "arch", "graphs",
+                          "generations", "error")}
+        out(f"  {e['dur_ms']:>10.2f} ms  {idx.path(e)}"
+            + (f"  {attrs}" if attrs else ""))
+
+
+def print_timeline(idx: TraceIndex, limit: int, out=print):
+    subs = sorted((e for e in idx.spans if e["name"] == "submit"),
+                  key=lambda e: e["ts"])
+    if not subs:
+        return
+    out("\n== serve timeline (submit spans) ==")
+    shown = subs if limit <= 0 else subs[:limit]
+    for e in shown:
+        a = e["attrs"]
+        out(f"  {e['ts']:9.3f}s  #{a.get('request_id', '?'):>4} "
+            f"{a.get('arch', '?')}/{a.get('shape', '?'):<12} "
+            f"{a.get('outcome', '?'):<5} {e['dur_ms']:>10.2f} ms")
+    if len(subs) > len(shown):
+        out(f"  ... {len(subs) - len(shown)} more "
+            f"(--timeline 0 shows all)")
+
+
+def print_metrics(events, out=print):
+    snaps = [e for e in events if e.get("type") == "metrics"]
+    if not snaps:
+        return
+    snap = snaps[-1]["snapshot"]
+    out("\n== metrics (last snapshot) ==")
+    for name, v in sorted(snap.get("counters", {}).items()):
+        out(f"  {name} = {v}")
+    for name, v in sorted(snap.get("gauges", {}).items()):
+        out(f"  {name} = {v}")
+    for name, s in sorted(snap.get("histograms", {}).items()):
+        out(f"  {name}: {s}")
+
+
+def gate(idx: TraceIndex, tol_ms: float = 0.5):
+    """Structural invariants -> list of violation strings (empty = ok)."""
+    problems = []
+    if not idx.spans:
+        problems.append("empty trace: no spans at all")
+        return problems
+    errs = [e for e in idx.spans if "error" in e["attrs"]]
+    for e in errs[:5]:
+        problems.append(f"error span: {idx.path(e)}: {e['attrs']['error']}")
+    if len(errs) > 5:
+        problems.append(f"... and {len(errs) - 5} more error spans")
+    for e in idx.spans:
+        cs = idx.child_sum(e)
+        if cs > e["dur_ms"] + tol_ms:
+            problems.append(
+                f"child-sum > parent: {idx.path(e)} "
+                f"(children {cs:.3f} ms > span {e['dur_ms']:.3f} ms)")
+    names = {e["name"] for e in idx.spans}
+    if "submit" in names:
+        missing = [n for n in SUBMIT_TAXONOMY if n not in names]
+        if "tick" in names:
+            missing += [n for n in REFINE_TAXONOMY if n not in names]
+        if missing:
+            problems.append(f"serve taxonomy incomplete: missing {missing}")
+    return problems
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="span-tree report over a REPRO_OBS=jsonl trace")
+    ap.add_argument("trace", help="JSONL trace file (REPRO_OBS_PATH)")
+    ap.add_argument("--top", type=int, default=10,
+                    help="N slowest individual spans to list")
+    ap.add_argument("--timeline", type=int, default=40,
+                    help="max submit-timeline rows (0 = all)")
+    ap.add_argument("--gate", action="store_true",
+                    help="exit 1 unless the structural invariants hold")
+    args = ap.parse_args(argv)
+
+    events, bad = load_events(args.trace)
+    idx = TraceIndex(events)
+    print(f"{args.trace}: {len(events)} events, {len(idx.spans)} spans"
+          + (f", {bad} corrupt lines skipped" if bad else ""))
+    print_tree(idx)
+    print_compile_attribution(idx)
+    print_slowest(idx, args.top)
+    print_timeline(idx, args.timeline)
+    print_metrics(events)
+
+    if args.gate:
+        problems = gate(idx)
+        if problems:
+            print("\nGATE FAILED:", file=sys.stderr)
+            for p in problems:
+                print(f"  - {p}", file=sys.stderr)
+            return 1
+        print("\ngate: ok (non-empty tree, no error spans, "
+              "child-sum <= parent, serve taxonomy complete)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
