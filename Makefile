@@ -1,5 +1,5 @@
 # Convenience targets; see ROADMAP.md for the tier-1 verify command.
-.PHONY: test smoke bench bench-zoo bench-gat bench-serve bench-check docs-check obs-report
+.PHONY: test smoke bench bench-zoo bench-gat bench-serve bench-check serve-gate docs-check obs-report
 
 test:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python -m pytest -x -q
@@ -34,6 +34,21 @@ bench-serve:
 # its freshly-written temp JSON.
 bench-check:
 	python tools/bench_check.py
+
+# concurrent-load serving SLO gate: re-run bench_serve (which includes
+# the concurrent-load probe — hit-path p99 during an in-flight miss
+# batch, neighbor-cache and persisted-restart checks) against a temp
+# JSON, then gate ONLY the serve section's structural relations
+# (failed==0, hit p99 during a miss < the miss batch, neighbor speedup
+# >= 1.0 and cheaper than a cold miss, restart answers from cache).
+# Never an absolute timing gate — safe on shared CI runners.
+serve-gate:
+	TMP_JSON=$$(mktemp) && \
+	  BENCH_JSON=$$TMP_JSON BENCH_STEPS=50 \
+	  PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} \
+	  python benchmarks/run.py serve && \
+	  python tools/bench_check.py $$TMP_JSON --section serve && \
+	  rm -f $$TMP_JSON
 
 # every REPRO_* env var referenced in src/ must be documented in
 # docs/architecture.md

@@ -24,3 +24,6 @@ echo "smoke: BENCH_JSON=$BENCH_JSON (temp copy, removed on exit)"
 BENCH_STEPS=50 BENCH_JSON="$BENCH_JSON" python benchmarks/run.py inner_loop
 # schema gate on the freshly-written sections (not a timing gate)
 python tools/bench_check.py "$BENCH_JSON"
+# keep a gitignored copy at a stable path so CI can upload the smoke
+# run's numbers as an artifact next to the serve trace
+cp "$BENCH_JSON" smoke_bench.json

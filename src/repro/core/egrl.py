@@ -291,8 +291,16 @@ class _EvoPopulation:
         zoo driver)."""
         raise NotImplementedError
 
+    def prior_logits(self, vec) -> jnp.ndarray:
+        """Public wrapper over the driver's Boltzmann-grid posterior
+        logits for flat GNN params ``vec`` — the placement service
+        blends these with neighbor-mapping one-hots before passing the
+        result back through ``warm_start(logits=...)``."""
+        return self._prior_logits(jnp.asarray(vec, jnp.float32))
+
     def warm_start(self, vec, *, gnn_frac: float = 0.5,
-                   noise_std: float = 0.05, t_init: float = 0.5):
+                   noise_std: float = 0.05, t_init: float = 0.5,
+                   logits=None):
         """Seed the population from a trained policy's flat GNN params
         (zero-shot warm start — how the placement service turns its
         accumulated prior into a head start for each miss batch's
@@ -305,7 +313,15 @@ class _EvoPopulation:
         the driver's key stream, so warm-started trajectories are
         deterministic per (cfg.seed, call order); padded sharding rows
         stay untouched and the result is re-placed in the population
-        sharding."""
+        sharding.
+
+        ``logits`` (optional, the driver's Boltzmann node grid shape —
+        see ``_prior_logits``) overrides the prior's posterior logits
+        for the Boltzmann re-seeding: the placement service passes a
+        blend of the GNN prior's logits and one-hot logits derived from
+        a nearest-neighbor's committed MAPPING, so a near-identical
+        graph's refinement starts from its neighbor's answer instead of
+        the prior alone.  The GNN rows still seed from ``vec``."""
         vec = jnp.asarray(vec, jnp.float32)
         if self.n_g:
             n_seed = max(1, int(round(gnn_frac * self.n_g)))
@@ -315,7 +331,8 @@ class _EvoPopulation:
             self.gnn_pop = self.pop_sharding.put(jnp.concatenate(
                 [jnp.stack(rows), self.gnn_pop[n_seed:]]))
         if self.n_b:
-            logits = self._prior_logits(vec)
+            logits = (self._prior_logits(vec) if logits is None
+                      else jnp.asarray(logits, jnp.float32))
             seeds = [bz.seed_from_logits(logits, self._k(), t_init)
                      for _ in range(self.n_b)]
             rows = [bz.to_flat(b.prior, b.log_t) for b in seeds]

@@ -28,15 +28,32 @@ the hash.  The construction:
 The hash is a pure host-side function — no jax, no device work — and
 costs O(rounds * E log E), microseconds-to-milliseconds for <=1k-node
 graphs (cheap enough to run per request).
+
+**WL similarity sketch** (PR 9): the placement service's
+nearest-neighbor cache needs "almost the same graph" on top of the
+exact key above.  ``wl_sketch`` turns the per-round WL label SETS into
+a fixed-width minhash signature (``_SKETCH_SLOTS`` independent minhash
+functions per refinement round, salted blake2b), so two graphs that
+differ in one resized layer agree on most slots — round 0 differs only
+at the touched node, and each later round only within its WL
+neighborhood — while structurally different graphs agree on ~none.
+``SketchIndex`` buckets signatures by bands of consecutive slots
+(classic banded LSH), so a lookup probes a handful of dict buckets
+instead of scanning the cache; candidates are re-ranked by the exact
+slot-agreement fraction (``sketch_similarity``).  Everything is
+content-derived and deterministic across processes (no per-process
+hash seeds), so a persisted index re-loads byte-for-byte.
 """
 from __future__ import annotations
 
 import hashlib
-from typing import List, Tuple
+from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 from repro.graphs.graph import Node, WorkloadGraph
 
 _WL_ROUNDS = 3
+_SKETCH_SLOTS = 8        # minhash functions per WL round
+_BAND_ROWS = 2           # sketch slots per LSH band
 
 
 def _h(*parts) -> str:
@@ -63,24 +80,42 @@ def node_payload(nd: Node) -> Tuple:
     )
 
 
+def _adjacency(g: WorkloadGraph) -> Tuple[List[List[int]], List[List[int]]]:
+    preds: List[List[int]] = [[] for _ in range(g.n)]
+    succs: List[List[int]] = [[] for _ in range(g.n)]
+    for s, d in g.edges:
+        preds[d].append(s)
+        succs[s].append(d)
+    return preds, succs
+
+
+def _wl_label_rounds(payloads: List[Tuple], preds: List[List[int]],
+                     succs: List[List[int]]) -> List[List[str]]:
+    """Per-node WL labels for rounds 0.._WL_ROUNDS (round 0 = the pure
+    payload label; each later round mixes in the sorted predecessor /
+    successor label multisets, direction-aware).  Shared by the exact
+    canonical form (which keys on the LAST round) and the similarity
+    sketch (which keys on ALL rounds)."""
+    n = len(payloads)
+    labels = [_h("node", p) for p in payloads]
+    rounds = [labels]
+    for _ in range(_WL_ROUNDS):
+        labels = [_h(labels[i],
+                     sorted(labels[p] for p in preds[i]),
+                     sorted(labels[s] for s in succs[i]))
+                  for i in range(n)]
+        rounds.append(labels)
+    return rounds
+
+
 def canonical_form(g: WorkloadGraph):
     """(payloads in canonical order, canonical edges, canonical ring
     width) — the serialization ``canonical_hash`` covers.  Useful in
     tests to see WHY two graphs hash differently."""
     n = g.n
     payloads = [node_payload(nd) for nd in g.nodes]
-    preds: List[List[int]] = [[] for _ in range(n)]
-    succs: List[List[int]] = [[] for _ in range(n)]
-    for s, d in g.edges:
-        preds[d].append(s)
-        succs[s].append(d)
-
-    labels = [_h("node", p) for p in payloads]
-    for _ in range(_WL_ROUNDS):
-        labels = [_h(labels[i],
-                     sorted(labels[p] for p in preds[i]),
-                     sorted(labels[s] for s in succs[i]))
-                  for i in range(n)]
+    preds, succs = _adjacency(g)
+    labels = _wl_label_rounds(payloads, preds, succs)[-1]
 
     # Kahn with a deterministic, structure-only priority.  The original
     # index enters the key ONLY as the final tie-break between true
@@ -120,3 +155,99 @@ def canonical_hash(g: WorkloadGraph) -> str:
     """Exact-match cache key: 64-hex sha256 of the canonical form."""
     nodes, edges, ring = canonical_form(g)
     return _h("workload-graph", len(nodes), nodes, edges, ring)
+
+
+# ------------------------------------------------------------------ sketch
+def _minhash(label: str, round_idx: int, slot: int) -> int:
+    d = hashlib.blake2b(f"{round_idx}|{slot}|{label}".encode(),
+                        digest_size=8).digest()
+    return int.from_bytes(d, "big")
+
+
+def wl_sketch(g: WorkloadGraph,
+              slots: int = _SKETCH_SLOTS) -> Tuple[int, ...]:
+    """Similarity signature: ``slots`` independent minhashes of the WL
+    label SET of every round (rounds 0.._WL_ROUNDS), concatenated —
+    ``(_WL_ROUNDS + 1) * slots`` 64-bit ints.  Invariant under node
+    relabeling (a label set does not see node order); a one-node payload
+    perturbation leaves most slots untouched (round 0 changes one set
+    element; round r only relabels the radius-r neighborhood), so
+    near-identical graphs agree on most slots and structurally different
+    graphs on ~none."""
+    payloads = [node_payload(nd) for nd in g.nodes]
+    preds, succs = _adjacency(g)
+    sig: List[int] = []
+    for r, labels in enumerate(_wl_label_rounds(payloads, preds, succs)):
+        uniq = sorted(set(labels))
+        for j in range(slots):
+            sig.append(min((_minhash(lab, r, j) for lab in uniq),
+                           default=0))
+    return tuple(sig)
+
+
+def sketch_similarity(a: Sequence[int], b: Sequence[int]) -> float:
+    """Fraction of agreeing sketch slots — an unbiased estimate of the
+    average per-round Jaccard similarity of the WL label sets."""
+    if len(a) != len(b) or not a:
+        return 0.0
+    return sum(x == y for x, y in zip(a, b)) / len(a)
+
+
+class SketchIndex:
+    """Banded-LSH index over WL sketches: ``add`` buckets a signature by
+    bands of ``_BAND_ROWS`` consecutive slots; ``query`` unions the
+    band buckets that match the probe and re-ranks the candidates by
+    exact ``sketch_similarity`` (ties broken by sorted key, so lookups
+    are deterministic).  A band matches when ALL its rows agree, so with
+    per-slot agreement s the probe finds a stored near-neighbor with
+    probability 1 - (1 - s^rows)^bands — ~1 for the one-resized-layer
+    case, ~0 for unrelated graphs.  ``group`` partitions the index
+    (the placement service groups by size class, so a neighbor always
+    shares the probe's canonical batch geometry)."""
+
+    def __init__(self, band_rows: int = _BAND_ROWS):
+        self.band_rows = int(band_rows)
+        self._sigs: Dict[str, Tuple[int, ...]] = {}
+        self._groups: Dict[str, object] = {}
+        self._buckets: Dict[Tuple[object, int, Tuple[int, ...]],
+                            Set[str]] = {}
+
+    def __len__(self) -> int:
+        return len(self._sigs)
+
+    def __contains__(self, key: str) -> bool:
+        return key in self._sigs
+
+    def _bands(self, sig: Sequence[int]):
+        for bi in range(0, len(sig), self.band_rows):
+            yield bi, tuple(sig[bi:bi + self.band_rows])
+
+    def add(self, key: str, sig: Sequence[int], group=None) -> None:
+        if key in self._sigs:
+            return
+        sig = tuple(int(x) for x in sig)
+        self._sigs[key] = sig
+        self._groups[key] = group
+        for bi, band in self._bands(sig):
+            self._buckets.setdefault((group, bi, band), set()).add(key)
+
+    def items(self):
+        """(key, signature, group) triples — for persistence."""
+        return [(k, self._sigs[k], self._groups[k]) for k in self._sigs]
+
+    def query(self, sig: Sequence[int], group=None,
+              exclude: Sequence[str] = ()
+              ) -> Tuple[Optional[str], float]:
+        """Best stored near-neighbor of ``sig`` within ``group``:
+        (key, similarity), or (None, 0.0) when no band matches."""
+        sig = tuple(int(x) for x in sig)
+        cands: Set[str] = set()
+        for bi, band in self._bands(sig):
+            cands |= self._buckets.get((group, bi, band), set())
+        cands -= set(exclude)
+        best, best_sim = None, 0.0
+        for k in sorted(cands):
+            s = sketch_similarity(sig, self._sigs[k])
+            if s > best_sim:
+                best, best_sim = k, s
+        return best, best_sim

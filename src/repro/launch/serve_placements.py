@@ -63,16 +63,19 @@ def slo_summary(results: List[PlacementResult]) -> dict:
     split by cache hit/miss, hit rate, and placement quality."""
     ok = [r for r in results if r.ok]
     hits = [r.wall_ms for r in ok if r.cache_hit]
-    misses = [r.wall_ms for r in ok if not r.cache_hit]
+    nn = [r.wall_ms for r in ok if r.nn_hit]
+    misses = [r.wall_ms for r in ok if not r.cache_hit and not r.nn_hit]
     return {
         "requests": len(results),
         "ok": len(ok),
         "failed": len(results) - len(ok),
         "cache_hits": len(hits),
+        "nn_hits": len(nn),
         "cache_misses": len(misses),
         "hit_rate": round(len(hits) / max(len(ok), 1), 4),
         "hit_p50_ms": round(_pct(hits, 50), 3),
         "hit_p99_ms": round(_pct(hits, 99), 3),
+        "nn_p50_ms": round(_pct(nn, 50), 3),
         "miss_p50_ms": round(_pct(misses, 50), 3),
         "miss_p99_ms": round(_pct(misses, 99), 3),
         "egrl_frac": round(float(np.mean(
@@ -84,13 +87,16 @@ def slo_summary(results: List[PlacementResult]) -> dict:
 
 def serve(requests: List[PlacementRequest], seed: int = 0,
           cache: Optional[str] = None, budget=None, batch=None,
-          pop_size: int = 8, log=_log.info):
+          pop_size: int = 8, slots: Optional[str] = None,
+          nn: Optional[str] = None, persist: Optional[str] = None,
+          log=_log.info):
     """Run a request stream through a fresh service; returns
     (results, summary dict incl. service stats + throughput, service).
     ``log=None`` silences the SLO lines (bench mode)."""
     t0 = time.perf_counter()
     svc = PlacementService(seed=seed, cache=cache, budget=budget,
-                           batch=batch, pop_size=pop_size)
+                           batch=batch, pop_size=pop_size, slots=slots,
+                           nn=nn, persist=persist)
     results = svc.run(requests)
     wall = time.perf_counter() - t0
     summary = slo_summary(results)
@@ -99,7 +105,7 @@ def serve(requests: List[PlacementRequest], seed: int = 0,
         wall_s=round(wall, 2),
         archs=len({r.arch for r in requests}),
         budget=svc.budget, batch_max=svc.batch_max,
-        pop_size=svc.pop_size,
+        pop_size=svc.pop_size, slots=svc.slots,
         **{k: v for k, v in svc.stats().items()
            if k in ("evaluator_calls", "cache_size", "ticks")})
     if log:
@@ -107,6 +113,7 @@ def serve(requests: List[PlacementRequest], seed: int = 0,
             f"({summary['failed']} failed) over {summary['archs']} archs "
             f"in {wall:.1f}s ({summary['placements_per_sec']:.2f}/s)")
         log(f"cache: {summary['cache_hits']} hits / "
+            f"{summary['nn_hits']} neighbor hits / "
             f"{summary['cache_misses']} misses "
             f"(rate {summary['hit_rate']:.2f}); time-to-placement "
             f"hit p50/p99 {summary['hit_p50_ms']:.1f}/"
@@ -134,6 +141,13 @@ def main():
                     help="override REPRO_SERVE_BUDGET (generations)")
     ap.add_argument("--batch", default=None,
                     help="override REPRO_SERVE_BATCH (graphs per batch)")
+    ap.add_argument("--slots", default=None,
+                    choices=["off", "step", "thread"],
+                    help="override REPRO_SERVE_SLOTS (refinement slots)")
+    ap.add_argument("--nn", default=None, choices=["on", "off"],
+                    help="override REPRO_SERVE_NN (neighbor cache)")
+    ap.add_argument("--persist", default=None,
+                    help="override REPRO_SERVE_PERSIST (checkpoint dir)")
     ap.add_argument("--pop", type=int, default=8)
     ap.add_argument("--out", default=None,
                     help="write the summary JSON here")
@@ -143,7 +157,8 @@ def main():
                             archs=args.archs, shapes=args.shapes)
     _, summary, _ = serve(reqs, seed=args.seed, cache=args.cache,
                           budget=args.budget, batch=args.batch,
-                          pop_size=args.pop)
+                          pop_size=args.pop, slots=args.slots,
+                          nn=args.nn, persist=args.persist)
     if args.out:
         os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
         with open(args.out, "w") as f:

@@ -1,9 +1,12 @@
 """Span tracer: context-manager spans with parent/child nesting,
 monotonic-clock durations and structured attributes.
 
-- **Nesting** is a plain stack on the tracer — the instrumented loops
-  (EGRL generations, the placement service) are single-threaded, so no
-  thread-local machinery is needed or wanted on the hot path.
+- **Nesting** is a per-thread stack on the tracer (``threading.local``)
+  — spans opened on a worker thread (the placement service's
+  ``slots=thread`` refinement, PR 9) form their own root-level subtree
+  and can never pop a span belonging to another thread.  Span ids are
+  allocated under a lock so they stay unique across threads, and sink
+  fan-out is serialized so concurrent closes never tear a JSONL line.
 - **The clock is injectable** (any ``() -> float`` in seconds;
   default ``time.perf_counter``), so tests drive a ``FakeClock`` and
   assert EXACT durations instead of sleeping.
@@ -28,6 +31,7 @@ read, no sink touch.
 from __future__ import annotations
 
 import json
+import threading
 import time
 from collections import deque
 from typing import Callable, List, Optional
@@ -136,7 +140,18 @@ class Tracer:
         self.clock = clock
         self.epoch = clock()
         self._next_id = 0
-        self._stack: List[Span] = []
+        self._lock = threading.Lock()      # id allocation + sink fan-out
+        self._local = threading.local()    # per-thread open-span stack
+
+    @property
+    def _stack(self) -> List[Span]:
+        """The CALLING thread's open-span stack (lazily created) — a
+        worker thread's spans nest among themselves and root at
+        ``parent=null``, never under another thread's open span."""
+        st = getattr(self._local, "stack", None)
+        if st is None:
+            st = self._local.stack = []
+        return st
 
     def span(self, name: str, **attrs) -> Span:
         return Span(self, name, attrs)
@@ -146,23 +161,29 @@ class Tracer:
         return self.clock() - self.epoch
 
     def emit(self, event: dict) -> None:
-        for s in self.sinks:
-            s.emit(event)
+        with self._lock:
+            for s in self.sinks:
+                s.emit(event)
 
     def _open(self, span: Span) -> None:
-        span.id = self._next_id
-        self._next_id += 1
-        span.parent = self._stack[-1].id if self._stack else None
-        self._stack.append(span)
+        with self._lock:
+            span.id = self._next_id
+            self._next_id += 1
+        stack = self._stack
+        span.parent = stack[-1].id if stack else None
+        stack.append(span)
         span._t0 = self.clock()       # last: exclude bookkeeping from dur
 
     def _close(self, span: Span) -> None:
         t1 = self.clock()
-        # tolerate out-of-order closes (a leaked span) without wedging
-        while self._stack and self._stack[-1] is not span:
-            self._stack.pop()
-        if self._stack:
-            self._stack.pop()
+        # tolerate out-of-order closes (a leaked span) without wedging;
+        # the stack is thread-local, so this can only pop spans the
+        # CLOSING thread itself leaked open
+        stack = self._stack
+        while stack and stack[-1] is not span:
+            stack.pop()
+        if stack:
+            stack.pop()
         self.emit({"type": "span", "name": span.name, "id": span.id,
                    "parent": span.parent,
                    "ts": round(span._t0 - self.epoch, 6),

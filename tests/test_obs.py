@@ -252,3 +252,49 @@ def test_compile_span_first_vs_second_same_class():
 
     assert not any(e["type"] == "span" and e["name"] == "jit_compile"
                    for e in ev2), "second driver must reuse the executable"
+
+
+def test_tracer_is_thread_safe():
+    """PR 9 runs refinement slots on a worker thread while the submit
+    path keeps tracing hits: span stacks are per-thread (a worker span
+    roots at parent=None, never under another thread's open span), ids
+    stay unique under concurrency, and every span is emitted."""
+    import threading
+
+    with obs.override(mode="mem"):
+
+        def worker(tag):
+            for _ in range(200):
+                with obs.span("w_outer", tag=tag):
+                    with obs.span("w_inner", tag=tag):
+                        pass
+
+        threads = [threading.Thread(target=worker, args=(t,), daemon=True)
+                   for t in range(2)]
+        with obs.span("main_outer"):
+            for t in threads:
+                t.start()
+            for _ in range(200):
+                with obs.span("main_inner"):
+                    pass
+            for t in threads:
+                t.join()
+        events = [e for e in obs.drain() if e["type"] == "span"]
+
+    ids = [e["id"] for e in events]
+    assert len(ids) == len(set(ids)), "span ids must be unique"
+    by_id = {e["id"]: e for e in events}
+    for e in events:
+        if e["name"] == "main_inner":
+            assert by_id[e["parent"]]["name"] == "main_outer"
+        elif e["name"] == "w_inner":
+            p = by_id[e["parent"]]
+            assert p["name"] == "w_outer" and \
+                p["attrs"]["tag"] == e["attrs"]["tag"], \
+                "a worker span must parent within its own thread"
+        elif e["name"] == "w_outer":
+            assert e["parent"] is None, \
+                "worker roots must not nest under another thread's span"
+    assert sum(e["name"] == "main_inner" for e in events) == 200
+    assert {e["name"] for e in events} >= {"w_outer", "w_inner",
+                                           "main_outer"}

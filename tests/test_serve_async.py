@@ -1,0 +1,369 @@
+"""PR 9 serving additions (serving/placement_service.py): async
+refinement slots (step + thread modes), the WL-sketch nearest-neighbor
+cache, budget autoscaling, and cache/prior persistence.
+
+Speed discipline (same as tests/test_placement_service.py): every test
+stays in canonical size class 256 with the default batch/pop geometry,
+so the module-level jitted programs compile once for the whole module.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from _fake_clock import FakeClock
+from repro import obs
+from repro.graphs.extract import extract_for
+from repro.serving.placement_service import (PlacementRequest,
+                                             PlacementService)
+
+ARCHS = ["qwen3-0.6b", "mamba2-780m", "zamba2-1.2b", "granite-3-8b"]
+SHAPE = "decode_32k"
+
+
+def _req(i, arch=ARCHS[0], shape=SHAPE):
+    return PlacementRequest(i, arch, shape)
+
+
+def _variant(g, scale, only_node=None):
+    """weight_bytes perturbation: one node (a near neighbor — most WL
+    sketch slots survive) or every node (a cold miss — all labels
+    change)."""
+    return dataclasses.replace(g, nodes=tuple(
+        dataclasses.replace(nd, weight_bytes=nd.weight_bytes * scale + 1.0)
+        if (only_node is None or i == only_node) else nd
+        for i, nd in enumerate(g.nodes)))
+
+
+# ------------------------------------------------------------- slots
+def test_step_mode_hit_returns_before_commit():
+    """The ISSUE's headline behavior, on the deterministic fake clock:
+    a cache hit submitted MID-REFINEMENT (slot dispatched, generations
+    still pending) is answered immediately — its submit span closes
+    strictly before the refinement's commit span even opens — and the
+    batch still commits and drains afterwards."""
+    clock = FakeClock(auto_tick=0.25)
+    with obs.override(mode="mem", clock=clock):
+        svc = PlacementService(seed=0, slots="step", budget=2)
+        [warm] = svc.run([_req(0, ARCHS[0])])
+        assert warm.ok
+        obs.drain()
+
+        # two distinct misses -> queued, then dispatched
+        assert svc.submit(_req(1, ARCHS[1])) is None
+        assert svc.submit(_req(2, ARCHS[2])) is None
+        assert svc.tick() == []           # dispatch + assemble step
+        assert svc._slot is not None and not svc._slot.finished
+
+        # mid-refinement hit: answered at submit, before any commit
+        hit = svc.submit(_req(3, ARCHS[0]))
+        assert hit is not None and hit.ok and hit.cache_hit
+        assert svc._slot is not None and not svc._slot.finished, \
+            "the hit must not have forced the refinement to finish"
+        events = obs.events()
+        names = [e["name"] for e in events]
+        assert "submit" in names and "commit" not in names and \
+            "slot_drain" not in names, names
+        hit_close_ts = next(e["ts"] + e["dur_ms"] / 1e3 for e in events
+                            if e["name"] == "submit"
+                            and e["attrs"].get("request_id") == 3)
+
+        drained = {r.request_id: r for r in svc.run_until_drained()}
+        assert sorted(drained) == [1, 2]
+        assert all(r.ok for r in drained.values())
+        commit = next(e for e in obs.events() if e["name"] == "commit")
+        assert commit["ts"] > hit_close_ts, \
+            "commit must open after the mid-flight hit closed"
+        assert svc.stats()["queued"] == 0
+
+
+def test_step_mode_spans_never_straddle_a_yield():
+    """Every span in a step-mode trace closes in the tick that opened
+    it: no streaming-hit submit ever nests under a paused refinement
+    span, and every parent's child-sum stays <= its own duration (the
+    trace_report gate invariant)."""
+    with obs.override(mode="mem"):
+        svc = PlacementService(seed=0, slots="step", budget=2)
+        svc.run([_req(0, ARCHS[0])])
+        obs.drain()
+        svc.submit(_req(1, ARCHS[1]))
+        out = [svc.tick()]
+        while svc._slot is not None or svc._queue:
+            svc.submit(_req(100 + len(out), ARCHS[0]))  # streaming hits
+            out.append(svc.tick())
+        events = obs.events()
+        by_id = {e["id"]: e for e in events}
+        for e in events:
+            if e["name"] == "submit":
+                assert e["parent"] is None, \
+                    f"streaming hit nested under {by_id.get(e['parent'])}"
+        for e in events:
+            kids = sum(c["dur_ms"] for c in events
+                       if c["parent"] == e["id"])
+            assert kids <= e["dur_ms"] + 1e-6, (e, kids)
+
+
+def test_thread_mode_streams_hits_during_refinement():
+    """slots=thread: while the worker refines a miss batch, the submit
+    path keeps answering cache hits (the non-blocking SLO)."""
+    svc = PlacementService(seed=0, slots="thread", budget=8)
+    [warm] = svc.run([_req(0, ARCHS[0])])
+    assert warm.ok
+
+    g = extract_for(ARCHS[0], SHAPE)
+    cold = [_variant(g, 1.5 + 0.25 * j) for j in range(2)]
+    for j, gv in enumerate(cold):
+        assert svc.submit(PlacementRequest(10 + j, "cold", SHAPE),
+                          graph=gv) is None
+    assert svc.tick() == []               # dispatch only, never blocks
+    slot = svc._slot
+    assert slot is not None
+
+    streamed = 0
+    while not slot.finished and streamed < 50:
+        r = svc.submit(_req(100 + streamed, ARCHS[0]))
+        assert r is not None and r.cache_hit, \
+            "hit path must stream during an in-flight refinement"
+        streamed += 1
+    assert streamed >= 1
+    drained = svc.run_until_drained()
+    assert sorted(r.request_id for r in drained) == [10, 11]
+    assert all(r.ok for r in drained)
+    assert svc.stats()["queued"] == 0 and svc._slot is None
+
+
+@pytest.mark.parametrize("mode", ["step", "thread"])
+def test_slots_modes_match_off_mode_placements(mode):
+    """Placements are content-deterministic in every slots mode: the
+    same stream produces bit-identical mappings per graph hash."""
+    reqs = [PlacementRequest(i, a, SHAPE) for i, a in enumerate(ARCHS)]
+    base = {r.graph_hash: r for r in PlacementService(seed=0).run(reqs)}
+    got = {r.graph_hash: r
+           for r in PlacementService(seed=0, slots=mode).run(reqs)}
+    assert sorted(base) == sorted(got)
+    for h in base:
+        assert base[h].source == got[h].source
+        assert base[h].speedup == got[h].speedup
+        assert np.array_equal(base[h].mapping, got[h].mapping)
+
+
+def test_poisoned_slot_closes_error_span_and_drains():
+    """Fault injection through the slot machinery: a refinement that
+    raises still closes its ``refine_class`` span (error attribute
+    recorded), fails ONLY the poisoned graphs, and the queue drains —
+    the service is not wedged and keeps serving afterwards."""
+    with obs.override(mode="mem"):
+        svc = PlacementService(seed=0, slots="step")
+
+        def boom(n_class, items):
+            raise RuntimeError("poisoned slot")
+
+        svc._refine_class = boom
+        assert svc.submit(_req(0, ARCHS[0])) is None
+        assert svc.submit(_req(1, ARCHS[1])) is None
+        res = {r.request_id: r for r in svc.run_until_drained()}
+        assert sorted(res) == [0, 1]
+        assert all(not r.ok and "poisoned slot" in r.error
+                   for r in res.values())
+        assert svc.stats()["queued"] == 0 and svc._slot is None
+        assert svc.stats()["faults"] >= 1
+        errs = [e for e in obs.events() if e["name"] == "refine_class"
+                and "error" in e["attrs"]]
+        assert errs, "the poisoned slot must close an error span"
+        assert all("poisoned slot" in e["attrs"]["error"] for e in errs)
+        ticks = [e for e in obs.events() if e["name"] == "tick"]
+        assert ticks and all("error" not in e["attrs"] for e in ticks), \
+            "the fault must be contained below the tick"
+
+        # restore -> the failed graphs retry and serve
+        del svc.__dict__["_refine_class"]
+        after = svc.run([_req(2, ARCHS[0]), _req(3, ARCHS[1])])
+        assert all(r.ok for r in after)
+
+
+def test_thread_mode_poisoned_slot_drains():
+    """Same fault isolation when the slot runs on a worker thread."""
+    svc = PlacementService(seed=0, slots="thread")
+
+    def boom(n_class, items):
+        raise RuntimeError("poisoned slot")
+
+    svc._refine_class = boom
+    assert svc.submit(_req(0, ARCHS[0])) is None
+    res = svc.run_until_drained()
+    assert len(res) == 1 and not res[0].ok
+    assert svc.stats()["queued"] == 0 and svc._slot is None
+
+
+# ------------------------------------------------------ neighbor cache
+def test_nn_compiler_neighbor_seeds_instead_of_serving():
+    """Never-worse-than-compiler: a near-identical graph whose
+    neighbor re-scores to speedup <= 1.0 (a compiler-sourced mapping
+    re-scores to exactly 1.0) is NOT served from the neighbor — it
+    queues for refinement, warm-started from the adapted mapping."""
+    svc = PlacementService(seed=0, budget=1)   # short budget: compiler
+    [base] = svc.run([_req(0, ARCHS[0])])
+    assert base.ok and base.source == "compiler"
+    g = extract_for(ARCHS[0], SHAPE)
+    near = _variant(g, 1.001, only_node=g.n // 2)
+    r = svc.submit(PlacementRequest(1, "near", SHAPE), graph=near)
+    assert r is None, "a <=1.0 rescore must refine, not serve"
+    h = near.canonical_hash()
+    assert h in svc._nbr_seeds, "the neighbor mapping must seed refinement"
+    assert svc.metrics.counter("nn_rescored").value == 1
+    assert svc.metrics.counter("nn_hits").value == 0
+    [drained] = svc.run_until_drained()
+    assert drained.ok and drained.speedup >= 1.0
+    assert h not in svc._nbr_seeds, "seeds are dropped at drain"
+
+
+def test_nn_dissimilar_graph_never_matches():
+    """Structurally different graphs (a different arch) share ~no WL
+    sketch slots: no neighbor serve, no neighbor seed — the exact-hash
+    path is unchanged."""
+    svc = PlacementService(seed=0, budget=1)
+    svc.run([_req(0, ARCHS[0])])
+    other = extract_for(ARCHS[1], SHAPE)
+    r = svc.submit(PlacementRequest(1, ARCHS[1], SHAPE), graph=other)
+    assert r is None
+    assert other.canonical_hash() not in svc._nbr_seeds
+    assert svc.metrics.counter("nn_rescored").value == 0
+    svc.run_until_drained()
+
+
+@pytest.mark.slow
+def test_nn_hit_serves_rescored_and_cheaper():
+    """The neighbor fast path end-to-end: once a graph has an
+    egrl-sourced committed mapping, a one-node-perturbed variant is
+    served at submit time (``source="neighbor"``, ``nn_hit``), with a
+    re-scored speedup > 1.0, WITHOUT a refinement batch."""
+    svc = None
+    for budget in (8, 16, 32, 64):
+        cand = PlacementService(seed=0, budget=budget)
+        [base] = cand.run([_req(0, ARCHS[0])])
+        if base.source == "egrl":
+            svc = cand
+            break
+    assert svc is not None, "no budget beat the compiler on this arch"
+    calls = svc.evaluator_calls
+    g = extract_for(ARCHS[0], SHAPE)
+    near = _variant(g, 1.001, only_node=g.n // 2)
+    r = svc.submit(PlacementRequest(1, "near", SHAPE), graph=near)
+    assert r is not None and r.ok and r.nn_hit
+    assert r.source == "neighbor" and r.speedup > 1.0
+    assert not r.cache_hit
+    assert svc.evaluator_calls == calls, \
+        "a neighbor hit re-scores but never runs a refinement batch"
+    assert svc.stats()["nn_hits"] == 1
+    # the nn entry is committed: an exact repeat is now an exact hit
+    again = svc.submit(PlacementRequest(2, "near", SHAPE), graph=near)
+    assert again is not None and again.cache_hit
+
+
+def test_nn_off_knob_disables_lookup():
+    svc = PlacementService(seed=0, budget=1, nn="off")
+    assert not svc.nn_enabled
+    svc.run([_req(0, ARCHS[0])])
+    g = extract_for(ARCHS[0], SHAPE)
+    near = _variant(g, 1.001, only_node=g.n // 2)
+    assert svc.submit(PlacementRequest(1, "near", SHAPE),
+                      graph=near) is None
+    assert svc.metrics.counter("nn_rescored").value == 0
+    assert len(svc._index) == 0
+    svc.run_until_drained()
+
+
+# --------------------------------------------------------- autoscaling
+def test_budget_autoscaling_for_weak_classes():
+    """``auto`` budget doubles the generations of a class whose commit
+    history shows a weak prior (egrl win rate < 0.5 over >= batch_max
+    commits); an explicit int budget disables autoscaling entirely."""
+    svc = PlacementService(seed=0)            # budget "auto" -> 4
+    assert svc.autoscale
+    assert svc._budget_for(256) == 4          # no history yet
+    svc._class_stats[256] = (0, 4)            # 0 wins in 4 commits
+    assert svc._budget_for(256) == 8
+    svc._class_stats[256] = (3, 4)            # strong prior
+    assert svc._budget_for(256) == 4
+    svc._class_stats[256] = (0, 3)            # not enough history
+    assert svc._budget_for(256) == 4
+
+    pinned = PlacementService(seed=0, budget=4)
+    assert not pinned.autoscale
+    pinned._class_stats[256] = (0, 8)
+    assert pinned._budget_for(256) == 4
+
+
+def test_drain_updates_class_stats():
+    svc = PlacementService(seed=0, budget=1)
+    svc.run([_req(0, ARCHS[0]), _req(1, ARCHS[1])])
+    wins, total = svc._class_stats[256]
+    assert total == 2 and 0 <= wins <= 2
+
+
+# --------------------------------------------------------- persistence
+def test_persistence_roundtrip_skips_evaluator(tmp_path):
+    """A fresh service pointed at a persisted directory answers
+    previously-seen graphs from the restored cache WITHOUT touching the
+    evaluator (proved by poisoning the refinement path), and restores
+    the sketch index + class stats + GNN prior alongside."""
+    d = str(tmp_path / "ckpt")
+    svc = PlacementService(seed=0, budget=1, persist=d)
+    first = svc.run([_req(0, ARCHS[0]), _req(1, ARCHS[1])])
+    assert all(r.ok for r in first)
+
+    svc2 = PlacementService(seed=0, budget=1, persist=d)
+
+    def boom(n_class, items):
+        raise AssertionError("persisted hit must not reach the evaluator")
+
+    svc2._refine_class = boom
+    for i, arch in enumerate(ARCHS[:2]):
+        r = svc2.submit(_req(10 + i, arch))
+        assert r is not None and r.ok and r.cache_hit
+        base = next(b for b in first if b.arch == arch)
+        assert np.array_equal(r.mapping, base.mapping)
+        assert r.speedup == base.speedup and r.source == base.source
+    assert svc2.evaluator_calls == 0
+    assert len(svc2._index) == len(svc._index)
+    assert svc2._class_stats == svc._class_stats
+    assert (svc2._prior_vec is None) == (svc._prior_vec is None)
+    if svc._prior_vec is not None:
+        assert np.array_equal(svc2._prior_vec, svc._prior_vec)
+
+
+def test_persistence_keeps_recent_checkpoints(tmp_path):
+    from repro.checkpoint import manager as ckpt
+
+    d = str(tmp_path / "ckpt")
+    svc = PlacementService(seed=0, budget=1, persist=d)
+    svc.run([_req(0, ARCHS[0])])
+    svc.persist()
+    svc.persist()
+    steps = ckpt.all_steps(d)
+    assert steps and steps[-1] == svc._persist_step
+    # a restart resumes the step counter past the restored checkpoint
+    svc2 = PlacementService(seed=0, budget=1, persist=d)
+    svc2.persist()
+    assert ckpt.latest_step(d) == svc._persist_step + 1
+
+
+def test_persist_env_var_is_case_preserving(tmp_path, monkeypatch):
+    d = str(tmp_path / "MixedCase" / "Ckpt")
+    monkeypatch.setenv("REPRO_SERVE_PERSIST", d)
+    svc = PlacementService(seed=0, budget=1)
+    assert svc.persist_dir == d
+    monkeypatch.delenv("REPRO_SERVE_PERSIST")
+    assert PlacementService(seed=0).persist_dir is None
+
+
+def test_slots_env_knob_fail_loud(monkeypatch):
+    monkeypatch.setenv("REPRO_SERVE_SLOTS", "sometimes")
+    with pytest.raises(ValueError, match="REPRO_SERVE_SLOTS"):
+        PlacementService()
+    monkeypatch.delenv("REPRO_SERVE_SLOTS")
+    monkeypatch.setenv("REPRO_SERVE_NN", "maybe")
+    with pytest.raises(ValueError, match="REPRO_SERVE_NN"):
+        PlacementService()

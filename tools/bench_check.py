@@ -9,17 +9,24 @@ from the group, a renamed JSON key that would break trajectory
 comparisons across PRs, or a merge step (bench_zoo_sac -> generation)
 that stopped landing.
 
-Usage: ``python tools/bench_check.py [path]`` — default path is the
-tracked ``benchmarks/BENCH_inner_loop.json``; ``benchmarks/smoke.sh``
-passes its temp BENCH_JSON so the freshly-written file is validated on
-every smoke run.  Wired into ``make bench-check`` and CI.
+Usage: ``python tools/bench_check.py [path] [--section NAME]`` —
+default path is the tracked ``benchmarks/BENCH_inner_loop.json``;
+``benchmarks/smoke.sh`` passes its temp BENCH_JSON so the
+freshly-written file is validated on every smoke run.  ``--section``
+restricts the gate to one section (``make serve-gate`` re-runs only
+``serve`` against a JSON that carries nothing else).  Wired into
+``make bench-check`` / ``make serve-gate`` and CI.
 """
 from __future__ import annotations
 
+import argparse
 import json
 import math
 import pathlib
 import sys
+
+SECTIONS = ("rectify", "zoo_eval", "generation", "gat", "serve",
+            "pop_sharding")
 
 ROOT = pathlib.Path(__file__).resolve().parents[1]
 DEFAULT = ROOT / "benchmarks" / "BENCH_inner_loop.json"
@@ -49,12 +56,18 @@ def _require(errors, section, obj, key, kind=(int, float)):
     return val
 
 
-def check(data: dict) -> list:
+def check(data: dict, sections=None) -> list:
     errors = []
+    sections = set(SECTIONS if sections is None else sections)
+
+    def want(name: str) -> bool:
+        return name in sections
 
     # ---- rectify: pop + at least one per-graph row of us/rollout pairs
     rect = data.get("rectify")
-    if not isinstance(rect, dict):
+    if not want("rectify"):
+        pass
+    elif not isinstance(rect, dict):
         _fail(errors, "missing section 'rectify'")
     else:
         _require(errors, "rectify", rect, "pop")
@@ -70,7 +83,9 @@ def check(data: dict) -> list:
     # bucketed <= flat relation is deterministic, so checking it here
     # cannot flake on a slow runner)
     zoo = data.get("zoo_eval")
-    if not isinstance(zoo, dict):
+    if not want("zoo_eval"):
+        pass
+    elif not isinstance(zoo, dict):
         _fail(errors, "missing section 'zoo_eval'")
     else:
         _require(errors, "zoo_eval", zoo, "pop")
@@ -118,7 +133,9 @@ def check(data: dict) -> list:
 
     # ---- generation: per-graph ea/egrl ms + the merged zoo SAC bench
     gen = data.get("generation")
-    if not isinstance(gen, dict):
+    if not want("generation"):
+        pass
+    elif not isinstance(gen, dict):
         _fail(errors, "missing section 'generation'")
     else:
         _require(errors, "generation", gen, "pop")
@@ -154,7 +171,9 @@ def check(data: dict) -> list:
     # the dense jnp oracle).  Never a timing gate: relative speeds vary
     # by runner, presence and well-formedness do not.
     gat = data.get("gat")
-    if not isinstance(gat, dict):
+    if not want("gat"):
+        pass
+    elif not isinstance(gat, dict):
         _fail(errors, "missing section 'gat'")
     else:
         _require(errors, "gat", gat, "hidden")
@@ -200,7 +219,9 @@ def check(data: dict) -> list:
     # a cache hit skips refinement entirely, so if it does not hold the
     # split itself is mislabeled — never an absolute timing bound.
     srv = data.get("serve")
-    if not isinstance(srv, dict):
+    if not want("serve"):
+        pass
+    elif not isinstance(srv, dict):
         _fail(errors, "missing section 'serve'")
     else:
         _require(errors, "serve", srv, "requests")
@@ -251,10 +272,55 @@ def check(data: dict) -> list:
                 _fail(errors, f"serve.obs_overhead.overhead_frac: tracing "
                               f"costs {frac:.1%} on the hit path — the "
                               f"flight recorder must stay under 20%")
+        # concurrent: the PR 9 non-blocking SLOs.  Every gate is a
+        # structural RELATION (hits streamed while a miss batch was in
+        # flight and landed before it; a neighbor hit never loses to
+        # the compiler and beats a cold miss at the same budget; a
+        # restart answers from the persisted cache) — never an absolute
+        # timing bound, so a slow shared runner cannot flake it.
+        cc = srv.get("concurrent")
+        if not isinstance(cc, dict):
+            _fail(errors, "serve.concurrent: missing (bench_serve must "
+                          "run the concurrent-load probe)")
+        else:
+            _require(errors, "serve.concurrent", cc, "slots", kind=str)
+            _require(errors, "serve.concurrent", cc, "idle_hit_p50_ms")
+            _require(errors, "serve.concurrent", cc, "hits_during_miss")
+            _require(errors, "serve.concurrent", cc, "restart_hits")
+            p99 = _require(errors, "serve.concurrent", cc,
+                           "hit_p99_during_miss_ms")
+            batch_ms = _require(errors, "serve.concurrent", cc,
+                                "miss_batch_ms")
+            if isinstance(p99, (int, float)) \
+                    and isinstance(batch_ms, (int, float)) \
+                    and p99 >= batch_ms:
+                _fail(errors, f"serve.concurrent: hit p99 during the miss "
+                              f"batch ({p99} ms) is not below the batch "
+                              f"itself ({batch_ms} ms) — the hit path "
+                              f"blocked behind refinement")
+            nn_sp = cc.get("nn_speedup")
+            if not (isinstance(nn_sp, (int, float))
+                    and not isinstance(nn_sp, bool)
+                    and math.isfinite(nn_sp) and nn_sp >= 1.0):
+                _fail(errors, f"serve.concurrent.nn_speedup: a neighbor "
+                              f"hit must never be worse than the compiler "
+                              f"reference (>= 1.0), got {nn_sp!r}")
+            nn_ms = _require(errors, "serve.concurrent", cc, "nn_hit_ms")
+            cold_ms = _require(errors, "serve.concurrent", cc,
+                               "cold_miss_ms")
+            if isinstance(nn_ms, (int, float)) \
+                    and isinstance(cold_ms, (int, float)) \
+                    and nn_ms >= cold_ms:
+                _fail(errors, f"serve.concurrent: a neighbor hit "
+                              f"({nn_ms} ms) must be strictly cheaper than "
+                              f"a cold miss at the same budget "
+                              f"({cold_ms} ms)")
 
     # ---- pop_sharding: one row per benched mesh size
     pop = data.get("pop_sharding")
-    if not isinstance(pop, dict):
+    if not want("pop_sharding"):
+        pass
+    elif not isinstance(pop, dict):
         _fail(errors, "missing section 'pop_sharding'")
     else:
         _require(errors, "pop_sharding", pop, "pop")
@@ -272,8 +338,13 @@ def check(data: dict) -> list:
 
 
 def main(argv=None) -> int:
-    argv = sys.argv[1:] if argv is None else argv
-    path = pathlib.Path(argv[0]) if argv else DEFAULT
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("path", nargs="?", default=str(DEFAULT))
+    ap.add_argument("--section", action="append", choices=SECTIONS,
+                    help="gate only this section (repeatable); default "
+                         "is every section")
+    args = ap.parse_args(sys.argv[1:] if argv is None else argv)
+    path = pathlib.Path(args.path)
     try:
         with open(path) as f:
             data = json.load(f)
@@ -286,16 +357,17 @@ def main(argv=None) -> int:
         print(f"bench-check: {path} is not valid JSON: {e}",
               file=sys.stderr)
         return 1
-    errors = check(data)
+    errors = check(data, sections=args.section)
     if errors:
         print(f"bench-check: {path} failed {len(errors)} check(s):",
               file=sys.stderr)
         for e in errors:
             print(f"  - {e}", file=sys.stderr)
         return 1
-    print(f"bench-check OK: {path} has all expected sections "
-          f"(rectify, zoo_eval, generation[+zoo_sac], gat, pop_sharding, "
-          f"serve)")
+    gated = ", ".join(args.section) if args.section \
+        else "rectify, zoo_eval, generation[+zoo_sac], gat, " \
+             "pop_sharding, serve"
+    print(f"bench-check OK: {path} has all expected sections ({gated})")
     return 0
 
 

@@ -32,8 +32,12 @@ COMPILE_SPANS = ("jit_compile", "gat_autotune")
 # the serve taxonomy the acceptance gate requires (submit side vs the
 # refinement side, which only exists once a miss batch ran)
 SUBMIT_TAXONOMY = ("submit", "extract", "hash", "cache_lookup")
-REFINE_TAXONOMY = ("tick", "refine_class", "batch_assembly",
-                   "warm_start", "evolve", "commit")
+# the miss-side taxonomy (gated only when the trace saw a miss batch,
+# i.e. a ``tick``): nn_lookup is emitted per MISS, the slot/budget
+# spans per dispatched refinement — in every slots mode
+REFINE_TAXONOMY = ("nn_lookup", "tick", "slot_dispatch",
+                   "budget_rebalance", "slot_drain", "refine_class",
+                   "batch_assembly", "warm_start", "evolve", "commit")
 
 
 def load_events(path):
