@@ -59,13 +59,14 @@ docs-check:
 # sink on (reduced budget, temp BENCH_JSON so the tracked trajectory
 # file is untouched), then gate + render the trace with trace_report
 # (non-empty tree, zero error spans, child-sum <= parent, full serve
-# span taxonomy).  Leaves serve_trace.jsonl behind for inspection.
+# span taxonomy).  Leaves benchmarks/serve_trace.jsonl behind for
+# inspection.
 obs-report:
-	rm -f serve_trace.jsonl
+	rm -f benchmarks/serve_trace.jsonl
 	TMP_JSON=$$(mktemp) && \
-	  REPRO_OBS=jsonl REPRO_OBS_PATH=serve_trace.jsonl \
+	  REPRO_OBS=jsonl REPRO_OBS_PATH=benchmarks/serve_trace.jsonl \
 	  BENCH_JSON=$$TMP_JSON BENCH_STEPS=50 \
 	  PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} \
 	  python benchmarks/run.py serve && \
 	  rm -f $$TMP_JSON
-	python tools/trace_report.py serve_trace.jsonl --gate
+	python tools/trace_report.py benchmarks/serve_trace.jsonl --gate

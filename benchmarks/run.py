@@ -369,6 +369,210 @@ def bench_pop_sharding() -> None:
     _update_json("pop_sharding", payload)
 
 
+def _bucket_dispatch_child() -> None:
+    """Child body for bench_bucket_dispatch: serial vs async bucket
+    dispatch on a forced multi-device CPU mesh (the device count is
+    fixed at first jax init, hence the subprocess).  Prints one
+    machine-readable DISPATCHCHILD line with the per-bucket time
+    breakdown, the serial/async pipeline times, the end-to-end
+    generation times, the bitwise-identity verdict, and the autotuned
+    bucket K."""
+    import numpy as np
+
+    import jax
+    from repro.core.egrl import EGRLConfig, ZooEGRL
+    from repro.distributed.dispatch import autotune_bucket_k
+    from repro.graphs.bucketed import bucket_keys_batch
+    from repro.graphs.zoo import WORKLOADS, bert, resnet50, tiny_gpt
+    from repro.memsim.batch import evaluate_population_bucketed
+
+    n_dev = len(jax.devices())
+    reps = max(2, min(6, STEPS // 160))
+    if STEPS >= 200:
+        graphs = [f() for f in WORKLOADS.values()]   # full registry zoo
+    else:
+        graphs = [resnet50(), bert(), tiny_gpt()]    # smoke: 3 classes
+    cfg = EGRLConfig(pop_size=8, boltzmann_frac=0.25, elites=2, seed=0)
+    serial = ZooEGRL(graphs, cfg, mode="ea", pop_shards="off",
+                     dispatch="off")
+    asyncd = ZooEGRL(graphs, cfg, mode="ea", pop_shards="off",
+                     dispatch="async")
+    assert serial.dispatch is None and asyncd.dispatch is not None
+
+    # warmup compiles both paths AND checks per-generation bit-identity
+    for _ in range(2):
+        rs, ra = serial.generation(), asyncd.generation()
+        assert rs["best_fitness"] == ra["best_fitness"]
+
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        serial.generation()
+    serial_gen_ms = (time.perf_counter() - t0) / reps * 1e3
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        asyncd.generation()
+    async_gen_ms = (time.perf_counter() - t0) / reps * 1e3
+    # equal generation counts -> the full trajectories must still agree
+    bit_identical = bool(
+        np.array_equal(serial.best_reward, asyncd.best_reward)
+        and all(np.array_equal(ms, ma) for ms, ma in
+                zip(serial.best_mapping, asyncd.best_mapping)))
+
+    # rollout+evaluate pipeline in isolation, one block at the end:
+    # serial issues all K bucket chains on ONE device, async fans them
+    # out — the structural claim the gate checks
+    dsp = asyncd.dispatch
+    pop = asyncd.gnn_pop
+    keys = jax.random.split(jax.random.PRNGKey(1), pop.shape[0])
+
+    def async_pipe():
+        lg = dsp.forward(pop)
+        maps = dsp.sample(keys, lg)
+        jax.block_until_ready(dsp.evaluate(maps, cfg.reward_scale)["reward"])
+
+    def serial_pipe():
+        lgs = [f(serial.gnn_pop) for f in serial._pop_logits]
+        maps = tuple(serial._pop_sample(kc, lg) for kc, lg in
+                     zip(bucket_keys_batch(keys, serial.zoo.n_buckets),
+                         lgs))
+        jax.block_until_ready(evaluate_population_bucketed(
+            serial.zoo, maps, cfg.reward_scale)["reward"])
+
+    async_pipe()
+    serial_pipe()                            # warmup
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        async_pipe()
+    async_ms = (time.perf_counter() - t0) / reps * 1e3
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        serial_pipe()
+    serial_ms = (time.perf_counter() - t0) / reps * 1e3
+
+    per_bucket = dsp.measure(pop, reward_scale=cfg.reward_scale,
+                             reps=reps)
+    k = autotune_bucket_k(graphs, pop=4, reps=1)
+    print("DISPATCHCHILD " + json.dumps({
+        "mesh": n_dev,
+        "buckets": asyncd.zoo.n_buckets,
+        "graphs": len(graphs),
+        "pop": cfg.pop_size,
+        "reps": reps,
+        # smoke rows (3 tiny graphs) are schema-gated only: per-bucket
+        # compute is so small that cross-device staging, not overlap,
+        # decides the pipeline relation — bench_check gates the timing
+        # RELATIONS on full-size rows (the tracked JSON)
+        "smoke": STEPS < 200,
+        "device_map": {f"bucket{b}": d
+                       for b, d in dsp.device_map().items()},
+        "per_bucket_ms": {f"bucket{b}": round(v, 3)
+                          for b, v in sorted(per_bucket.items())},
+        "per_bucket_sum_ms": round(sum(per_bucket.values()), 3),
+        "serial_ms": round(serial_ms, 3),
+        "async_ms": round(async_ms, 3),
+        "serial_gen_ms": round(serial_gen_ms, 3),
+        "async_gen_ms": round(async_gen_ms, 3),
+        "bit_identical": bit_identical,
+        "autotuned_k": k,
+    }))
+
+
+def _multi_slot_probe(seed: int = 0) -> dict:
+    """Multi-slot pool SLO (``slots="thread:2"``): two queued size
+    classes refine CONCURRENTLY — both slots' spans land in the gated
+    taxonomy with per-slot attribution, everything drains, and nothing
+    fails.  bench_check gates the structure (slots_used == 2, both
+    classes dispatched+drained, failed == 0), never timings."""
+    from repro import obs
+    from repro.graphs.extract import extract_for
+    from repro.serving.placement_service import (PlacementRequest,
+                                                 PlacementService)
+
+    shape = "decode_32k"
+    archs = ["seamless-m4t-medium", "qwen3-0.6b"]   # classes 128 + 256
+    with obs.override(mode="mem"):
+        svc = PlacementService(seed=seed, slots="thread:2", budget=2,
+                               nn="off")
+        for i, a in enumerate(archs):
+            assert svc.submit(PlacementRequest(i, a, shape),
+                              graph=extract_for(a, shape)) is None
+        t0 = time.perf_counter()
+        drained = svc.run_until_drained()
+        wall_ms = (time.perf_counter() - t0) * 1e3
+        stats = svc.stats()
+        events = obs.events()
+    assert len(drained) == len(archs) and all(r.ok for r in drained)
+    disp = [e for e in events if e["name"] == "slot_dispatch"]
+    drains = [e for e in events if e["name"] == "slot_drain"]
+    classes = sorted(e["attrs"]["n_class"] for e in disp)
+    return {
+        "slots": "thread:2",
+        "n_slots": svc.n_slots,
+        "classes": classes,
+        "slots_used": len({e["attrs"]["slot"] for e in disp}),
+        "slots_drained": len({e["attrs"]["slot"] for e in drains}),
+        "drain_wall_ms": round(wall_ms, 3),
+        "served": stats["served"],
+        "failed": stats["failed"],
+        "span_names": sorted({e["name"] for e in events}),
+    }
+
+
+def bench_bucket_dispatch() -> None:
+    """Bucket-dispatch gate (PR 10): serial-vs-async generation and
+    pipeline times plus the per-bucket breakdown on a forced-8-device
+    CPU mesh (subprocess — the device count is fixed at first jax
+    init), and the multi-slot placement-service probe (``thread:2``).
+    Writes the ``bucket_dispatch`` section of BENCH_inner_loop.json;
+    tools/bench_check.py gates STRUCTURE only — async pipeline <
+    sum-of-blocked-buckets, the per-bucket sum within a loose factor of
+    the serial pipeline, bitwise-identical rewards, multi-slot
+    failed == 0 — never absolute timings."""
+    n = 8
+    env = dict(os.environ,
+               XLA_FLAGS=f"--xla_force_host_platform_device_count={n}",
+               JAX_PLATFORMS="cpu",   # forced host devices are CPU-only
+               BENCH_DISPATCH_CHILD="1")
+    for k in ("REPRO_POP_SHARDS", "REPRO_MODEL_SHARDS",
+              "REPRO_BUCKET_DISPATCH", "REPRO_ZOO_BUCKETS"):
+        env.pop(k, None)
+    out = subprocess.run([sys.executable, os.path.abspath(__file__)],
+                         env=env, capture_output=True, text=True,
+                         timeout=1800)
+    lines = [l for l in out.stdout.splitlines()
+             if l.startswith("DISPATCHCHILD ")]
+    if out.returncode != 0 or not lines:
+        raise RuntimeError(
+            f"bucket_dispatch child (mesh={n}) failed "
+            f"(exit {out.returncode}):\n{out.stderr[-2000:]}")
+    row = json.loads(lines[-1][len("DISPATCHCHILD "):])
+    if row["mesh"] != n:
+        raise RuntimeError(
+            f"bucket_dispatch child saw {row['mesh']} device(s) instead "
+            f"of {n} — timings would be recorded under the wrong mesh")
+    if not row["bit_identical"]:
+        raise RuntimeError(
+            "async dispatch diverged from the serial trajectory — "
+            "refusing to record timings for a wrong result")
+    row["multi_slot"] = _multi_slot_probe(seed=0)
+
+    print(f"dispatch_async_pipeline,{row['async_ms']},"
+          f"ms_serial_{row['serial_ms']}_buckets{row['buckets']}")
+    print(f"dispatch_bucket_sum,{row['per_bucket_sum_ms']},"
+          f"ms_blocked_per_bucket_mesh{row['mesh']}")
+    print(f"dispatch_generation_async,{row['async_gen_ms']},"
+          f"ms_serial_{row['serial_gen_ms']}")
+    print(f"dispatch_bit_identical,{int(row['bit_identical'])},"
+          f"rewards_and_mappings")
+    print(f"dispatch_autotuned_k,{row['autotuned_k']},"
+          f"buckets_octave_{row['buckets']}")
+    ms = row["multi_slot"]
+    print(f"dispatch_multi_slot,{ms['slots_used']},"
+          f"classes_{'_'.join(map(str, ms['classes']))}"
+          f"_failed{ms['failed']}")
+    _update_json("bucket_dispatch", row)
+
+
 def _obs_overhead(svc, results, reps: int = 25) -> dict:
     """Hit-path tracing tax: replay one cached (arch, shape) through the
     warmed service ``reps`` times each with tracing off and with the
@@ -654,6 +858,7 @@ BENCHES = {
     "gat": bench_gat,
     "pop_sharding": bench_pop_sharding,
     "serve": bench_serve,
+    "bucket_dispatch": bench_bucket_dispatch,
     "fig4": bench_fig4,
     "fig5": bench_fig5,
     "fig7": bench_fig7,
@@ -664,13 +869,17 @@ BENCHES = {
 # generation and zoo_sac both merge into the shared "generation"
 # section, so either can be refreshed standalone.
 GROUPS = {"inner_loop": ("rectify", "zoo_eval", "generation", "zoo_sac",
-                         "gat", "pop_sharding", "serve")}
+                         "gat", "pop_sharding", "serve",
+                         "bucket_dispatch")}
 
 
 def main(argv=None) -> None:
     sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
     if os.environ.get("BENCH_POP_CHILD"):
         _pop_sharding_child()
+        return
+    if os.environ.get("BENCH_DISPATCH_CHILD"):
+        _bucket_dispatch_child()
         return
     argv = sys.argv[1:] if argv is None else argv
     names = []

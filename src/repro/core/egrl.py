@@ -75,6 +75,7 @@ from repro.core import ea as ea_mod
 from repro.core import gnn
 from repro.core.replay import ReplayBank, ReplayBuffer
 from repro.core.sac import SACConfig, SACLearner, ZooSAC
+from repro.distributed.dispatch import BucketDispatcher
 from repro.distributed.population import resolve_pop_sharding
 from repro.graphs.batch import GraphBatch
 from repro.graphs.bucketed import (BucketedZoo, bucket_keys_batch,
@@ -593,10 +594,13 @@ class ZooEGRL(_EvoPopulation):
     def __init__(self, graphs: Sequence[WorkloadGraph],
                  cfg: EGRLConfig = EGRLConfig(), mode: str = "ea",
                  fitness_agg: Optional[str] = None, pop_shards=None,
-                 zoo: Optional[BucketedZoo] = None, buckets=None):
+                 zoo: Optional[BucketedZoo] = None, buckets=None,
+                 dispatch=None):
         """``zoo`` reuses a prebuilt ``BucketedZoo`` (or a flat
         ``GraphBatch``, wrapped as one bucket); ``buckets`` overrides
-        the ``REPRO_ZOO_BUCKETS`` policy ("auto" / "off" / int)."""
+        the ``REPRO_ZOO_BUCKETS`` policy ("auto" / "off" / int /
+        "autotune"); ``dispatch`` overrides ``REPRO_BUCKET_DISPATCH``
+        ("auto" / "off" / "async" — see distributed/dispatch.py)."""
         assert mode in ("egrl", "ea", "pg")
         self.mode = mode
         self.cfg = cfg
@@ -659,6 +663,30 @@ class ZooEGRL(_EvoPopulation):
         self._pop_boltz = lambda ks, pops: boltz_split(
             _bz_sample_pop(ks, pops))
 
+        # bucket-parallel dispatch (PR 10): place each bucket's pipeline
+        # on its own device so generation wall time approaches the
+        # slowest bucket, not the sum.  Mutually exclusive with the
+        # ("pop",) sharding — sharded arrays already span every device.
+        self.dispatch: Optional[BucketDispatcher] = None
+        if not self.pop_sharding.active:
+            d = BucketDispatcher(self.zoo, self._template, policy=dispatch)
+            self.dispatch = d if d.active else None
+
+        # wide-layout gate (PR 10, 2-D ("pop", "model") mesh): buckets
+        # whose forward dominates the generation re-lay the population
+        # rows over the flattened ("pop", "model") super-axis — a pure
+        # row split over pop*model devices, so per-row results stay
+        # bit-identical — while cheap buckets keep the replicated-over-
+        # "model" layout (a re-layout costs a collective; only the big
+        # buckets earn it back).  "Big" = within 2x of the costliest
+        # bucket's G * N^2 forward proxy.
+        if self.pop_sharding.active and self.pop_sharding.model_shards > 1:
+            costs = [b.n_graphs * b.n_max ** 2 for b in self.zoo.buckets]
+            top = max(costs)
+            self._wide_bucket = tuple(c * 2 >= top for c in costs)
+        else:
+            self._wide_bucket = (False,) * self.zoo.n_buckets
+
         self.steps = 0
         self.best_reward = np.full(self.n_graphs, -np.inf)
         self.best_mapping: List[Optional[np.ndarray]] = [None] * self.n_graphs
@@ -680,14 +708,37 @@ class ZooEGRL(_EvoPopulation):
         parts, results = {}, {}
         real = {"g": n_g, "b": n_b}
         logits_g = None
+        dsp = self.dispatch
         if n_g:
-            with obs.span("rollout.gnn", rows=n_g):
-                logits_g = [f(self.gnn_pop) for f in self._pop_logits]
-                keys = _pad_keys(jax.random.split(self._k(), n_g),
-                                 self.n_g_pad)
-                parts["g"] = tuple(
-                    self._pop_sample(kc, lg) for kc, lg in
-                    zip(bucket_keys_batch(keys, zoo.n_buckets), logits_g))
+            with obs.span("rollout.gnn", rows=n_g,
+                          dispatch=dsp is not None):
+                if dsp is not None:
+                    # per-bucket forwards issued on their own devices
+                    # (donated population replicas); logits pulled back
+                    # to the primary device only for the EA step's
+                    # bucket-major concat.  Same programs, same key
+                    # split — bitwise the serial path's values.
+                    logits_dev = dsp.forward(self.gnn_pop)
+                    keys = _pad_keys(jax.random.split(self._k(), n_g),
+                                     self.n_g_pad)
+                    parts["g"] = dsp.sample(keys, logits_dev)
+                    logits_g = dsp.pull(logits_dev)
+                else:
+                    # 2-D mesh: dominant buckets take the wide row
+                    # layout (rows over pop*model devices), the rest
+                    # read the ("pop",)-sharded matrix as-is
+                    wide_pop = (self.pop_sharding.put_wide(self.gnn_pop)
+                                if any(self._wide_bucket) else None)
+                    logits_g = [
+                        f(wide_pop if self._wide_bucket[k]
+                          else self.gnn_pop)
+                        for k, f in enumerate(self._pop_logits)]
+                    keys = _pad_keys(jax.random.split(self._k(), n_g),
+                                     self.n_g_pad)
+                    parts["g"] = tuple(
+                        self._pop_sample(kc, lg) for kc, lg in
+                        zip(bucket_keys_batch(keys, zoo.n_buckets),
+                            logits_g))
         if n_b:
             with obs.span("rollout.boltzmann", rows=n_b):
                 parts["b"] = self._pop_boltz(_pad_keys(
@@ -697,10 +748,12 @@ class ZooEGRL(_EvoPopulation):
             with obs.span("rollout.pg", rows=cfg.pg_rollouts):
                 parts["pg"] = self.learner.explore_actions(cfg.pg_rollouts)
         with obs.span("evaluate", parts=len(parts),
-                      buckets=zoo.n_buckets):
+                      buckets=zoo.n_buckets, dispatch=dsp is not None):
             for name, maps in parts.items():
-                results[name] = evaluate_population_bucketed(
-                    zoo, maps, cfg.reward_scale)   # (P_pad, G) zoo order
+                results[name] = (
+                    dsp.evaluate(maps, cfg.reward_scale)
+                    if dsp is not None else evaluate_population_bucketed(
+                        zoo, maps, cfg.reward_scale))  # (P_pad, G) zoo order
 
         # ---- EA step on the aggregate fitness, still on device
         empty = jnp.zeros((0,), jnp.float32)

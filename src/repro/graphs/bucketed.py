@@ -61,8 +61,12 @@ from repro.utils.envpolicy import env_policy
 
 def resolve_bucket_policy(override: Union[str, int, None] = None
                           ) -> Union[str, int]:
-    """``REPRO_ZOO_BUCKETS`` -> "auto" | "off" | int >= 1, fail-loud."""
-    return env_policy("REPRO_ZOO_BUCKETS", choices=("auto", "off"),
+    """``REPRO_ZOO_BUCKETS`` -> "auto" | "off" | "autotune" | int >= 1,
+    fail-loud.  "autotune" picks K from a measured per-bucket time model
+    (distributed/dispatch.py) and is resolved by ``build_bucketed_zoo``
+    — it needs the graphs, not just their sizes."""
+    return env_policy("REPRO_ZOO_BUCKETS",
+                      choices=("auto", "off", "autotune"),
                       default="auto", override=override, int_ok=True)
 
 
@@ -74,6 +78,11 @@ def assign_buckets(sizes: Sequence[int],
     resolved policy (see the module docstring for the band formulas).
     """
     policy = resolve_bucket_policy(policy)
+    if policy == "autotune":
+        raise ValueError(
+            "REPRO_ZOO_BUCKETS=autotune needs the graphs (it measures "
+            "per-bucket times) — call build_bucketed_zoo, which resolves "
+            "autotune to a concrete K before assigning")
     n = len(sizes)
     assert n > 0, "empty zoo"
     if policy == "off" or policy == 1 or n == 1 or min(sizes) == max(sizes):
@@ -209,9 +218,16 @@ def build_bucketed_zoo(graphs: Sequence[WorkloadGraph],
                        buckets: Union[str, int, None] = None) -> BucketedZoo:
     """Bucket ``graphs`` by node count (policy: ``buckets`` argument,
     else ``REPRO_ZOO_BUCKETS``) and build one GraphBatch per bucket,
-    each padded only to its own (N_max_k, W_max_k)."""
+    each padded only to its own (N_max_k, W_max_k).  The "autotune"
+    policy measures a per-bucket time model first (lazy import — the
+    dispatch module imports this one) and resolves to the K whose
+    predicted makespan over the visible devices is smallest."""
     assert graphs, "empty zoo"
-    assign = assign_buckets([g.n for g in graphs], buckets)
+    policy = resolve_bucket_policy(buckets)
+    if policy == "autotune":
+        from repro.distributed.dispatch import autotune_bucket_k
+        policy = autotune_bucket_k(graphs)
+    assign = assign_buckets([g.n for g in graphs], policy)
     n_buckets = max(assign) + 1
     per_bucket = [[g for g, a in zip(graphs, assign) if a == k]
                   for k in range(n_buckets)]

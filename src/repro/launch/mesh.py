@@ -17,6 +17,19 @@ def make_mesh(shape, axes):
     return jax.make_mesh(tuple(shape), tuple(axes))
 
 
+def _check_devices(needed: int, what: str) -> None:
+    """Fail loud BEFORE jax.make_mesh when a requested mesh wants more
+    devices than exist — otherwise the request surfaces much later as an
+    opaque XLA sharding error deep inside a jitted call."""
+    n_dev = len(jax.devices())
+    if needed > n_dev:
+        raise ValueError(
+            f"{what} requests {needed} device(s) but only {n_dev} are "
+            f"visible — lower the shard count or raise the device count "
+            f"(e.g. XLA_FLAGS=--xla_force_host_platform_device_count=N "
+            f"for CPU testing)")
+
+
 def make_pop_mesh(n_shards: int | None = None):
     """1-D mesh over the EA population axis ``("pop",)``.
 
@@ -25,4 +38,23 @@ def make_pop_mesh(n_shards: int | None = None):
     axis; see repro.distributed.population for the shard-count policy.
     """
     n = n_shards or len(jax.devices())
+    _check_devices(n, f"REPRO_POP_SHARDS={n_shards}" if n_shards
+                   else "make_pop_mesh()")
     return jax.make_mesh((n,), ("pop",))
+
+
+def make_pop_model_mesh(pop_shards: int, model_shards: int):
+    """2-D mesh ``("pop", "model")`` over pop_shards * model_shards
+    devices.
+
+    The EA genome arrays are sharded ``P("pop")`` (replicated over
+    "model" — shard_map specs that never mention the axis replicate
+    across it, so ``evolve_sharded`` runs unchanged and bit-identical).
+    Wide per-bucket GNN forwards shard their population rows over the
+    flattened ``P(("pop", "model"))`` super-axis — a pure row split, so
+    per-row results stay bit-identical to the replicated path.
+    """
+    needed = pop_shards * model_shards
+    _check_devices(needed, f"REPRO_POP_SHARDS={pop_shards} x "
+                           f"REPRO_MODEL_SHARDS={model_shards}")
+    return jax.make_mesh((pop_shards, model_shards), ("pop", "model"))

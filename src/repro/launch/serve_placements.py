@@ -105,7 +105,9 @@ def serve(requests: List[PlacementRequest], seed: int = 0,
         wall_s=round(wall, 2),
         archs=len({r.arch for r in requests}),
         budget=svc.budget, batch_max=svc.batch_max,
-        pop_size=svc.pop_size, slots=svc.slots,
+        pop_size=svc.pop_size,
+        slots=f"{svc.slots}:{svc.n_slots}"
+        if svc.n_slots > 1 else svc.slots,
         **{k: v for k, v in svc.stats().items()
            if k in ("evaluator_calls", "cache_size", "ticks")})
     if log:
@@ -142,8 +144,9 @@ def main():
     ap.add_argument("--batch", default=None,
                     help="override REPRO_SERVE_BATCH (graphs per batch)")
     ap.add_argument("--slots", default=None,
-                    choices=["off", "step", "thread"],
-                    help="override REPRO_SERVE_SLOTS (refinement slots)")
+                    help="override REPRO_SERVE_SLOTS: off | step | "
+                         "thread | thread:N (N concurrent slots); "
+                         "validated fail-loud by the service")
     ap.add_argument("--nn", default=None, choices=["on", "off"],
                     help="override REPRO_SERVE_NN (neighbor cache)")
     ap.add_argument("--persist", default=None,

@@ -34,12 +34,14 @@ stack into that server:
   alone.  Exact-hash semantics are unchanged: the sketch is only
   consulted after an exact-match miss.
 
-- **Miss queue -> refinement slots (PR 9).**  Misses queue up; a
-  ``tick()`` first drains a finished refinement slot (commit + answer),
-  then — if no slot is in flight — dispatches AT MOST ONE size-class
-  batch (up to ``batch_max`` distinct graphs of the oldest queued
-  class) as a unit of background work, ``serving/engine.py``-style.
-  ``REPRO_SERVE_SLOTS`` picks how the slot advances:
+- **Miss queue -> refinement slots (PR 9, pool in PR 10).**  Misses
+  queue up; a ``tick()`` first drains every finished refinement slot
+  (commit + answer), then dispatches size-class batches (up to
+  ``batch_max`` distinct graphs of the oldest queued class) into free
+  slots as units of background work, ``serving/engine.py``-style.
+  Each slot owns ONE size class; with ``thread:N`` (N slots) queued
+  classes refine concurrently.  ``REPRO_SERVE_SLOTS`` picks how a slot
+  advances:
 
   * ``off`` (default): the slot runs to completion inside the same
     ``tick`` — PR 7's fully synchronous behavior, bit-identical
@@ -52,6 +54,15 @@ stack into that server:
     already-jitted evolve program (XLA CPU execution releases the
     GIL), so the submit path keeps streaming cache/neighbor hits
     while the miss batch refines; ``tick`` only polls and drains.
+  * ``thread:N``: a pool of N such slots — queued size classes
+    refine concurrently, one worker thread per slot, with per-slot
+    span attribution (``slot=<idx>`` on ``slot_dispatch``/
+    ``slot_drain``, thread name ``refine<idx>-n<class>``).  Each
+    slot snapshots the warm-start prior at dispatch and carries its
+    own autoscaled budget (thread-local), so sibling slots never
+    race each other's state; commits stay main-thread, in dispatch
+    order, and a poisoned class fails alone while the other slots
+    keep committing (the PR 9 fault-isolation/drain guarantees).
 
   Each class refines over a single-bucket zoo padded to a canonical
   grid: pow2 node count, ring width = the class width, pow2 producer /
@@ -122,8 +133,9 @@ Env knobs (utils/envpolicy.py, fail-loud):
   autoscaling).
 - ``REPRO_SERVE_BATCH``   — "auto" (default, 4) | int: max distinct
   graphs per refinement batch AND the canonical graph-slot count.
-- ``REPRO_SERVE_SLOTS``   — "off" (default) | "step" | "thread": how a
-  dispatched refinement slot advances (see above).
+- ``REPRO_SERVE_SLOTS``   — "off" (default) | "step" | "thread" |
+  "thread:N": how a dispatched refinement slot advances, and (thread:N)
+  how many refine concurrently (see above).
 - ``REPRO_SERVE_NN``      — "on" (default) | "off": the WL-sketch
   nearest-neighbor cache (needs the exact cache on).
 - ``REPRO_SERVE_PERSIST`` — unset (default) | a directory path for
@@ -235,13 +247,20 @@ class _RefinementSlot:
     a ``tick`` dispatches.  ``items`` is the hash-sorted (hash, graph)
     batch, ``budget`` the (possibly autoscaled) generation count;
     ``result`` is filled by ``_guarded_refine`` when the work is done
-    ({hash: entry}, error entries included — faults fail alone)."""
+    ({hash: entry}, error entries included — faults fail alone).
+    ``idx`` is the service-wide dispatch ordinal (per-slot span
+    attribution in the multi-slot pool); ``prior_vec`` snapshots the
+    service's GNN prior at DISPATCH time, so concurrently-refining
+    slots each see a deterministic warm start instead of racing the
+    other slot's mid-flight prior update."""
 
     def __init__(self, n_class: int, items: List[Tuple[str, WorkloadGraph]],
-                 budget: int):
+                 budget: int, idx: int = 0, prior_vec=None):
         self.n_class = n_class
         self.items = items
         self.budget = budget
+        self.idx = idx
+        self.prior_vec = prior_vec
         self.hashes = frozenset(h for h, _ in items)
         self.result: Optional[Dict[str, dict]] = None
         self.gen: Optional[Iterator] = None          # off / step modes
@@ -283,9 +302,16 @@ class PlacementService:
         m = env_policy("REPRO_SERVE_BATCH", choices=("auto",),
                        default="auto", override=batch, int_ok=True)
         self.batch_max = _AUTO_BATCH if m == "auto" else int(m)
-        self.slots = env_policy(
+        s = env_policy(
             "REPRO_SERVE_SLOTS", choices=("off", "step", "thread"),
-            default="off", override=slots)
+            default="off", override=slots, int_prefixes=("thread",))
+        # "thread:N" -> N concurrent worker slots; bare modes get one.
+        # self.slots stays one of the three base modes so every mode
+        # check below is unchanged.
+        if s.startswith("thread:"):
+            self.slots, self.n_slots = "thread", int(s.split(":", 1)[1])
+        else:
+            self.slots, self.n_slots = s, 1
         self.nn_enabled = self.cache_enabled and env_policy(
             "REPRO_SERVE_NN", choices=("on", "off"), default="on",
             override=nn) == "on"
@@ -301,7 +327,9 @@ class PlacementService:
         self._cache: Dict[str, dict] = {}      # hash -> placement entry
         self._index = SketchIndex()            # hash -> WL sketch (LSH)
         self._queue: List[_Pending] = []       # misses, arrival order
-        self._slot: Optional[_RefinementSlot] = None
+        self._slots: List[_RefinementSlot] = []   # in dispatch order
+        self._slot_seq = 0                     # per-slot span attribution
+        self._tls = threading.local()          # worker-local current slot
         self._nbr_seeds: Dict[str, np.ndarray] = {}   # hash -> mapping
         self._last_sketch: Optional[Tuple[int, ...]] = None
         self._class_stats: Dict[int, Tuple[int, int]] = {}  # (wins, n)
@@ -321,6 +349,15 @@ class PlacementService:
     def evaluator_calls(self) -> int:
         """Refinement batches run (cache hits never increment it)."""
         return self.metrics.counter("evaluator_calls").value
+
+    @property
+    def _slot(self) -> Optional[_RefinementSlot]:
+        """Single-slot view of the pool (PR 9 compatibility): the oldest
+        still-running slot, else the oldest undrained one, else None."""
+        for slot in self._slots:
+            if not slot.finished:
+                return slot
+        return self._slots[0] if self._slots else None
 
     # ------------------------------------------------------------ intake
     def submit(self, req: PlacementRequest,
@@ -436,53 +473,72 @@ class PlacementService:
 
     # ------------------------------------------------------- refinement
     def tick(self) -> List[PlacementResult]:
-        """One service heartbeat: drain a finished slot (commit to the
-        cache + sketch index, answer every queued request it covers),
-        dispatch at most ONE size-class refinement when idle, and
-        advance it (to completion in ``off`` mode, by one unit in
-        ``step`` mode).  Never blocks on an in-flight ``thread``-mode
-        slot — that is what keeps hits streaming during a miss batch."""
-        if not self._queue and self._slot is None:
+        """One service heartbeat: drain every finished slot (commit to
+        the cache + sketch index, answer every queued request they
+        cover), dispatch size-class refinements into free slots (one
+        class per slot, oldest request first), and advance non-thread
+        slots (to completion in ``off`` mode, by one unit in ``step``
+        mode).  Never blocks on an in-flight ``thread``-mode slot —
+        that is what keeps hits streaming during a miss batch."""
+        if not self._queue and not self._slots:
             return []
         with obs.span("tick", queued=len(self._queue)) as sp:
             self.metrics.counter("ticks").inc()
-            out = self._drain_slot()
-            if self._slot is None and self._queue:
-                self._dispatch()
-            slot = self._slot
-            if slot is not None:
+            out = self._drain_slots()
+            while len(self._slots) < self.n_slots and self._queue:
+                if not self._dispatch():
+                    break          # every queued class is already claimed
+            for slot in list(self._slots):
                 if self.slots == "off":
                     collections.deque(slot.gen, maxlen=0)
                 elif self.slots == "step":
                     next(slot.gen, None)
-                out += self._drain_slot()
-            sp.set(answered=len(out), in_flight=self._slot is not None)
+            out += self._drain_slots()
+            sp.set(answered=len(out), in_flight=bool(self._slots),
+                   slots=len(self._slots))
             return out
 
-    def _dispatch(self) -> None:
+    def _dispatch(self) -> bool:
         """Claim up to ``batch_max`` distinct graphs of the OLDEST
-        queued request's size class and start the refinement slot."""
-        with obs.span("slot_dispatch", mode=self.slots) as sp:
-            n_class = size_class(self._queue[0].graph.n)
+        queued size class not already being refined and start a slot
+        for it.  Hashes and classes held by in-flight slots are skipped
+        — each slot owns one class, so queued classes refine
+        concurrently when the pool has room.  Returns False when
+        nothing was claimable."""
+        claimed_h = frozenset(h for s in self._slots for h in s.hashes)
+        claimed_c = {s.n_class for s in self._slots}
+        head = next((p for p in self._queue
+                     if p.hash not in claimed_h
+                     and size_class(p.graph.n) not in claimed_c), None)
+        if head is None:
+            return False
+        with obs.span("slot_dispatch", mode=self.slots,
+                      slot=self._slot_seq) as sp:
+            n_class = size_class(head.graph.n)
             todo: Dict[str, WorkloadGraph] = {}
             for p in self._queue:
                 if size_class(p.graph.n) == n_class \
                         and p.hash not in todo \
+                        and p.hash not in claimed_h \
                         and len(todo) < self.batch_max:
                     todo[p.hash] = p.graph
             budget = self._budget_for(n_class)
             items = sorted(todo.items())   # hash order: arrival-order
-            slot = _RefinementSlot(n_class, items, budget)  # independence
-            self._slot = slot
+            slot = _RefinementSlot(n_class, items, budget,  # independence
+                                   idx=self._slot_seq,
+                                   prior_vec=self._prior_vec)
+            self._slot_seq += 1
+            self._slots.append(slot)
             sp.set(n_class=n_class, graphs=len(items), budget=budget)
             gen = self._guarded_refine(slot)
             if self.slots == "thread":
                 slot.thread = threading.Thread(
                     target=lambda: collections.deque(gen, maxlen=0),
-                    name=f"refine-n{n_class}", daemon=True)
+                    name=f"refine{slot.idx}-n{n_class}", daemon=True)
                 slot.thread.start()
             else:
                 slot.gen = gen
+        return True
 
     def _budget_for(self, n_class: int) -> int:
         """Autoscaled generation budget for one dispatch: classes whose
@@ -505,17 +561,22 @@ class PlacementService:
                    if hist.count else 0.0)
             return budget
 
-    def _drain_slot(self) -> List[PlacementResult]:
+    def _drain_slots(self) -> List[PlacementResult]:
+        """Drain every finished slot, in dispatch order (deterministic
+        commit order, whatever order the worker threads finished in)."""
+        out: List[PlacementResult] = []
+        for slot in [s for s in self._slots if s.finished]:
+            out.extend(self._drain_one(slot))
+        return out
+
+    def _drain_one(self, slot: _RefinementSlot) -> List[PlacementResult]:
         """Commit a FINISHED slot's results (cache + sketch index +
         class stats — all main-thread mutations, whatever mode ran the
         work) and answer every queued request they cover, duplicates
-        included.  No-op while the slot is still running."""
-        slot = self._slot
-        if slot is None or not slot.finished:
-            return []
+        included."""
         with obs.span("slot_drain", n_class=slot.n_class,
-                      graphs=len(slot.items)) as sp:
-            self._slot = None
+                      graphs=len(slot.items), slot=slot.idx) as sp:
+            self._slots.remove(slot)
             refined = slot.result or {}
             n_egrl = 0
             for h, entry in refined.items():
@@ -563,6 +624,10 @@ class PlacementService:
         unit per tick, ``thread`` mode drains it on a worker thread."""
         t0 = time.perf_counter()
         out: Dict[str, dict] = {}
+        # mark this slot as the executing thread's current one, so
+        # _active_budget / _assemble read the slot's own budget and
+        # dispatch-time prior snapshot instead of racing a sibling slot
+        self._tls.slot = slot
         try:
             if self.slots == "step" and not self._refine_overridden():
                 out = yield from self._refine_class_steps(
@@ -592,6 +657,8 @@ class PlacementService:
                     except Exception as e1:
                         self.metrics.counter("faults").inc()
                         out[h] = {"error": f"{type(e1).__name__}: {e1}"}
+        finally:
+            self._tls.slot = None
         self.metrics.histogram(
             "refine_ms", cls=f"n{slot.n_class}").observe(
             (time.perf_counter() - t0) * 1e3)
@@ -599,8 +666,19 @@ class PlacementService:
         return out
 
     def _active_budget(self) -> int:
-        slot = self._slot
+        """Budget of the slot the CALLING thread is refining (thread-
+        local: concurrent slots must not read each other's autoscaled
+        budgets).  Falls back to the base budget for direct
+        ``_refine_class`` calls outside any slot."""
+        slot = getattr(self._tls, "slot", None)
         return slot.budget if slot is not None else self.budget
+
+    def _active_prior(self) -> Optional[np.ndarray]:
+        """Warm-start prior for the calling thread's slot: the snapshot
+        taken at dispatch (deterministic given arrival order), else the
+        live service prior."""
+        slot = getattr(self._tls, "slot", None)
+        return slot.prior_vec if slot is not None else self._prior_vec
 
     def _canonical_batch(self, n_class: int,
                          graphs: List[WorkloadGraph]):
@@ -639,12 +717,13 @@ class PlacementService:
             drv = ZooEGRL(filled, cfg, mode="ea", zoo=batch)
         seeds = {h: self._nbr_seeds[h] for h in hashes
                  if h in self._nbr_seeds}
+        prior = self._active_prior()
         # always emitted (warm=False on the first-ever batch) so the
         # serve span taxonomy is complete on every trace
-        with obs.span("warm_start", warm=self._prior_vec is not None,
+        with obs.span("warm_start", warm=prior is not None,
                       nn_seeds=len(seeds)):
-            if self._prior_vec is not None or seeds:
-                vec = self._prior_vec if self._prior_vec is not None \
+            if prior is not None or seeds:
+                vec = prior if prior is not None \
                     else drv.best_gnn_vec()
                 drv.warm_start(vec, logits=self._warm_logits(
                     drv, n_class, items, seeds, vec))
@@ -658,7 +737,7 @@ class PlacementService:
         written into the node rows of every slot whose graph has a
         nearest-neighbor seed — the population starts FROM the
         neighbor's answer instead of the prior alone."""
-        if self._prior_vec is not None:
+        if self._active_prior() is not None:
             base = np.array(drv.prior_logits(vec), np.float32, copy=True)
         else:
             base = np.zeros((self.batch_max * n_class, 2, 3), np.float32)
@@ -843,9 +922,8 @@ class PlacementService:
     # ----------------------------------------------------------- driving
     def _distinct_queued(self) -> int:
         """Distinct UNCLAIMED graphs waiting (hashes already claimed by
-        the in-flight slot are excluded — they are being worked on)."""
-        claimed = self._slot.hashes if self._slot is not None \
-            else frozenset()
+        any in-flight slot are excluded — they are being worked on)."""
+        claimed = {h for s in self._slots for h in s.hashes}
         return len({p.hash for p in self._queue} - claimed)
 
     def run(self, requests: Iterable[PlacementRequest]
@@ -861,7 +939,7 @@ class PlacementService:
             if r is not None:
                 out.append(r)
             if self.slots == "thread":
-                if self._slot is not None \
+                if self._slots \
                         or self._distinct_queued() >= self.batch_max:
                     out.extend(self.tick())
             else:
@@ -882,14 +960,16 @@ class PlacementService:
         assert the queue never wedges."""
         out = []
         ticks = 0
-        while self._queue or self._slot is not None:
+        while self._queue or self._slots:
             ticks += 1
             assert ticks <= max_ticks, "placement queue is not draining"
             got = self.tick()
             out.extend(got)
-            if not got and self._slot is not None \
-                    and self.slots == "thread":
-                self._slot.wait()
+            if not got and self._slots and self.slots == "thread":
+                # any slot finishing unblocks the next tick; waiting on
+                # the oldest is enough (it always terminates — budgets
+                # are finite and faults resolve to error entries)
+                self._slots[0].wait()
         return out
 
     def stats(self) -> dict:
@@ -904,5 +984,6 @@ class PlacementService:
         c.update(queued=len(self._queue), cache_size=len(self._cache),
                  evaluator_calls=self.evaluator_calls,
                  hit_rate=c["hits"] / max(c["served"], 1),
-                 in_flight=self._slot is not None)
+                 in_flight=bool(self._slots),
+                 slots_in_flight=len(self._slots))
         return c

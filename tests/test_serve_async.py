@@ -1,14 +1,20 @@
 """PR 9 serving additions (serving/placement_service.py): async
 refinement slots (step + thread modes), the WL-sketch nearest-neighbor
-cache, budget autoscaling, and cache/prior persistence.
+cache, budget autoscaling, and cache/prior persistence — plus the PR 10
+multi-slot pool (``slots="thread:N"``): oldest-first class claiming,
+per-slot span attribution, and per-slot fault isolation.
 
-Speed discipline (same as tests/test_placement_service.py): every test
-stays in canonical size class 256 with the default batch/pop geometry,
-so the module-level jitted programs compile once for the whole module.
+Speed discipline (same as tests/test_placement_service.py): every
+refining test stays in canonical size class 256 with the default
+batch/pop geometry, so the module-level jitted programs compile once
+for the whole module.  The multi-slot tests use graphs from three
+DIFFERENT size classes but monkeypatch ``_refine_class``, so they never
+compile anything.
 """
 from __future__ import annotations
 
 import dataclasses
+import threading
 
 import numpy as np
 import pytest
@@ -195,6 +201,106 @@ def test_thread_mode_poisoned_slot_drains():
     res = svc.run_until_drained()
     assert len(res) == 1 and not res[0].ok
     assert svc.stats()["queued"] == 0 and svc._slot is None
+
+
+# ----------------------------------------------------- multi-slot pool
+# three archs in three DIFFERENT canonical size classes (128/256/512)
+MULTI = ["seamless-m4t-medium", "qwen3-0.6b", "llama4-maverick-400b-a17b"]
+MULTI_CLASSES = [128, 256, 512]
+
+
+def _fake_entry(g):
+    return {"mapping": np.zeros((g.n, 2), np.int32), "speedup": 1.0,
+            "latency_ms": 1.0, "ref_latency_ms": 1.0,
+            "source": "compiler"}
+
+
+def test_thread_n_slots_resolution(monkeypatch):
+    """``thread:N`` resolves through envpolicy (arg and env var alike)
+    to the base ``thread`` mode with an N-slot pool; malformed suffixes
+    fail loud like every other REPRO_* knob."""
+    svc = PlacementService(seed=0, slots="thread:3")
+    assert svc.slots == "thread" and svc.n_slots == 3
+    assert PlacementService(seed=0, slots="thread").n_slots == 1
+    monkeypatch.setenv("REPRO_SERVE_SLOTS", "thread:2")
+    svc = PlacementService(seed=0)
+    assert svc.slots == "thread" and svc.n_slots == 2
+    for bad in ("thread:0", "thread:two", "step:2"):
+        monkeypatch.setenv("REPRO_SERVE_SLOTS", bad)
+        with pytest.raises(ValueError, match="REPRO_SERVE_SLOTS"):
+            PlacementService(seed=0)
+
+
+def test_multi_slot_oldest_first_claim_and_drain():
+    """3 queued size classes + 2 slots: the two OLDEST classes claim
+    the two slots (in queue order, one class per slot) and refine
+    concurrently; the third dispatches once a slot frees; the pool
+    drains inside ``run_until_drained``'s tick bound with distinct
+    per-slot span attribution end-to-end."""
+    with obs.override(mode="mem"):
+        svc = PlacementService(seed=0, slots="thread:2")
+        release = threading.Event()
+        started = []
+
+        def fake(n_class, items):
+            started.append(n_class)
+            release.wait(30)
+            return {h: _fake_entry(g) for h, g in items}
+
+        svc._refine_class = fake
+        for i, arch in enumerate(MULTI):
+            assert svc.submit(_req(i, arch)) is None
+        assert svc.tick() == []          # fill the pool, never block
+        assert [s.n_class for s in svc._slots] == MULTI_CLASSES[:2], \
+            "the two oldest queued classes claim the slots, in order"
+        assert svc.stats()["slots_in_flight"] == 2
+        assert svc.tick() == []          # pool full: class 512 waits
+        assert len(svc._slots) == 2
+        release.set()
+        res = {r.request_id: r for r in svc.run_until_drained()}
+        assert sorted(res) == [0, 1, 2]
+        assert all(r.ok for r in res.values())
+        assert sorted(started) == MULTI_CLASSES
+        assert svc.stats()["queued"] == 0 and svc._slot is None
+        assert svc.stats()["failed"] == 0
+        disp = [e for e in obs.events() if e["name"] == "slot_dispatch"]
+        assert [e["attrs"]["slot"] for e in disp] == [0, 1, 2]
+        assert [e["attrs"]["n_class"] for e in disp] == MULTI_CLASSES
+        drains = {e["attrs"]["slot"]: e["attrs"]["n_class"]
+                  for e in obs.events() if e["name"] == "slot_drain"}
+        assert drains == dict(zip((0, 1, 2), MULTI_CLASSES))
+
+
+def test_multi_slot_poisoned_class_fails_alone():
+    """Per-slot fault isolation in the pool: a poisoned class closes
+    its error-attributed ``refine_class`` span on ITS slot while the
+    sibling slot keeps committing, and the pool still drains."""
+    with obs.override(mode="mem"):
+        svc = PlacementService(seed=0, slots="thread:2")
+
+        def fake(n_class, items):
+            if n_class == MULTI_CLASSES[0]:
+                raise RuntimeError("poisoned class")
+            return {h: _fake_entry(g) for h, g in items}
+
+        svc._refine_class = fake
+        for i, arch in enumerate(MULTI[:2]):     # classes 128 + 256
+            assert svc.submit(_req(i, arch)) is None
+        res = {r.request_id: r for r in svc.run_until_drained()}
+        assert sorted(res) == [0, 1]
+        assert not res[0].ok and "poisoned class" in res[0].error
+        assert res[1].ok, "the sibling slot must keep committing"
+        assert svc.stats()["queued"] == 0 and svc._slot is None
+        assert svc.stats()["failed"] == 1 and svc.stats()["faults"] >= 1
+        errs = [e for e in obs.events() if e["name"] == "refine_class"
+                and "error" in e["attrs"]]
+        assert errs and all("poisoned class" in e["attrs"]["error"]
+                            for e in errs)
+        assert all(e["attrs"]["n_class"] == MULTI_CLASSES[0]
+                   for e in errs), "errors attribute to the poisoned class"
+        drains = {e["attrs"]["slot"]: e["attrs"]["n_class"]
+                  for e in obs.events() if e["name"] == "slot_drain"}
+        assert drains == {0: MULTI_CLASSES[0], 1: MULTI_CLASSES[1]}
 
 
 # ------------------------------------------------------ neighbor cache

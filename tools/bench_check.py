@@ -26,7 +26,7 @@ import pathlib
 import sys
 
 SECTIONS = ("rectify", "zoo_eval", "generation", "gat", "serve",
-            "pop_sharding")
+            "pop_sharding", "bucket_dispatch")
 
 ROOT = pathlib.Path(__file__).resolve().parents[1]
 DEFAULT = ROOT / "benchmarks" / "BENCH_inner_loop.json"
@@ -148,23 +148,25 @@ def check(data: dict, sections=None) -> list:
                      "update_steps_per_call")
         rows = {k: v for k, v in gen.items()
                 if isinstance(v, dict)
-                and k not in ("zoo_sac", "zoo_sac_ms_trajectory")}
+                and k not in ("zoo_sac", "zoo_sac_ms_trajectory",
+                              "egrl_zoo_ms_trajectory")}
         if not rows:
             _fail(errors, "generation: no per-graph rows")
         for name, row in rows.items():
             for key in PER_GRAPH_MS:
                 _require(errors, f"generation.{name}", row, key)
-        # optional PR-over-PR audit trail (merged into the tracked file
-        # only — smoke's fresh temp JSON legitimately lacks it)
-        traj = gen.get("zoo_sac_ms_trajectory")
-        if traj is not None:
-            if not (isinstance(traj, dict) and traj):
-                _fail(errors, "generation.zoo_sac_ms_trajectory: expected "
-                              "a non-empty {pr_label: ms} dict")
-            else:
-                for name in traj:
-                    _require(errors, "generation.zoo_sac_ms_trajectory",
-                             traj, name)
+        # optional PR-over-PR audit trails (merged into the tracked file
+        # only — smoke's fresh temp JSON legitimately lacks them)
+        for tname in ("zoo_sac_ms_trajectory", "egrl_zoo_ms_trajectory"):
+            traj = gen.get(tname)
+            if traj is not None:
+                if not (isinstance(traj, dict) and traj):
+                    _fail(errors, f"generation.{tname}: expected "
+                                  f"a non-empty {{pr_label: ms}} dict")
+                else:
+                    for name in traj:
+                        _require(errors, f"generation.{tname}",
+                                 traj, name)
 
     # ---- gat: backend-autotune audit — per shape, the chosen backend
     # plus positive fwd/fwd+bwd timings for every candidate (including
@@ -316,6 +318,93 @@ def check(data: dict, sections=None) -> list:
                               f"a cold miss at the same budget "
                               f"({cold_ms} ms)")
 
+    # ---- bucket_dispatch: async per-bucket dispatch + multi-slot pool
+    # (PR 10).  Every gate is a structural RELATION on one run's own
+    # numbers — the async pipeline beats the sum of its serially
+    # blocked buckets (that sum pays K host syncs, so it bounds the
+    # serial issue order from above), the per-bucket sum stays within a
+    # loose factor of the measured serial pipeline (the breakdown must
+    # describe the same work it decomposes), rewards are bitwise the
+    # serial path's, and the two-class multi-slot probe drains both
+    # slots cleanly — never an absolute timing bound.
+    bd = data.get("bucket_dispatch")
+    if not want("bucket_dispatch"):
+        pass
+    elif not isinstance(bd, dict):
+        _fail(errors, "missing section 'bucket_dispatch'")
+    else:
+        _require(errors, "bucket_dispatch", bd, "mesh")
+        _require(errors, "bucket_dispatch", bd, "graphs")
+        _require(errors, "bucket_dispatch", bd, "pop")
+        _require(errors, "bucket_dispatch", bd, "serial_gen_ms")
+        _require(errors, "bucket_dispatch", bd, "async_gen_ms")
+        k = _require(errors, "bucket_dispatch", bd, "autotuned_k")
+        n_b = _require(errors, "bucket_dispatch", bd, "buckets")
+        if isinstance(k, int) and isinstance(n_b, int) and k < 1:
+            _fail(errors, f"bucket_dispatch.autotuned_k: {k} < 1")
+        if bd.get("bit_identical") is not True:
+            _fail(errors, "bucket_dispatch.bit_identical: async dispatch "
+                          "must reproduce the serial trajectory bit for "
+                          "bit, got "
+                          f"{bd.get('bit_identical')!r}")
+        per = bd.get("per_bucket_ms")
+        if not (isinstance(per, dict) and per):
+            _fail(errors, "bucket_dispatch.per_bucket_ms: expected a "
+                          "non-empty {bucket: ms} dict")
+        else:
+            for name in per:
+                _require(errors, "bucket_dispatch.per_bucket_ms", per, name)
+            if isinstance(n_b, int) and len(per) != n_b:
+                _fail(errors, f"bucket_dispatch.per_bucket_ms: {len(per)} "
+                              f"rows for {n_b} buckets")
+        psum = _require(errors, "bucket_dispatch", bd, "per_bucket_sum_ms")
+        a_ms = _require(errors, "bucket_dispatch", bd, "async_ms")
+        s_ms = _require(errors, "bucket_dispatch", bd, "serial_ms")
+        # the pipeline relations hold when bucket compute dominates the
+        # fixed dispatch cost — i.e. on full-size rows; a smoke row
+        # (BENCH_STEPS < 200: three tiny graphs) is schema-gated only
+        nums = not bd.get("smoke") and all(
+            isinstance(v, (int, float)) for v in (psum, a_ms, s_ms))
+        if nums and a_ms >= psum:
+            _fail(errors, f"bucket_dispatch: async pipeline ({a_ms} ms) is "
+                          f"not below the blocked per-bucket sum "
+                          f"({psum} ms) — the dispatch overlapped nothing")
+        if nums and not (0.3 <= psum / s_ms <= 3.0):
+            _fail(errors, f"bucket_dispatch: per-bucket sum ({psum} ms) is "
+                          f"not within 3x of the serial pipeline "
+                          f"({s_ms} ms) — the breakdown does not describe "
+                          f"the work it decomposes")
+        ms = bd.get("multi_slot")
+        if not isinstance(ms, dict):
+            _fail(errors, "bucket_dispatch.multi_slot: missing (the bench "
+                          "must run the thread:2 pool probe)")
+        else:
+            _require(errors, "bucket_dispatch.multi_slot", ms, "served")
+            _require(errors, "bucket_dispatch.multi_slot", ms,
+                     "drain_wall_ms")
+            if ms.get("failed") not in (0,):
+                _fail(errors, f"bucket_dispatch.multi_slot.failed: the "
+                              f"two-class probe must drain cleanly, got "
+                              f"{ms.get('failed')!r}")
+            for key in ("slots_used", "slots_drained"):
+                if ms.get(key) != 2:
+                    _fail(errors, f"bucket_dispatch.multi_slot.{key}: both "
+                                  f"size classes must run on their own "
+                                  f"slot, got {ms.get(key)!r}")
+            classes = ms.get("classes")
+            if not (isinstance(classes, list) and len(classes) == 2
+                    and len(set(classes)) == 2):
+                _fail(errors, f"bucket_dispatch.multi_slot.classes: "
+                              f"expected two DISTINCT size classes, got "
+                              f"{classes!r}")
+            names = ms.get("span_names")
+            missing = {"slot_dispatch", "slot_drain", "refine_class"} \
+                - set(names or ())
+            if missing:
+                _fail(errors, f"bucket_dispatch.multi_slot.span_names: "
+                              f"missing {sorted(missing)} from the gated "
+                              f"taxonomy")
+
     # ---- pop_sharding: one row per benched mesh size
     pop = data.get("pop_sharding")
     if not want("pop_sharding"):
@@ -366,7 +455,7 @@ def main(argv=None) -> int:
         return 1
     gated = ", ".join(args.section) if args.section \
         else "rectify, zoo_eval, generation[+zoo_sac], gat, " \
-             "pop_sharding, serve"
+             "pop_sharding, serve, bucket_dispatch"
     print(f"bench-check OK: {path} has all expected sections ({gated})")
     return 0
 

@@ -18,7 +18,7 @@ it over a fresh bench_serve trace): non-empty span tree, zero ``error``
 spans, every parent's child-durations sum <= its own duration, and —
 when the trace contains serve traffic — the full serve span taxonomy.
 
-    python tools/trace_report.py serve_trace.jsonl [--top 10] [--gate]
+    python tools/trace_report.py benchmarks/serve_trace.jsonl [--top 10] [--gate]
 """
 from __future__ import annotations
 
